@@ -1,0 +1,30 @@
+"""Paper Table I — the graph suite with degree statistics."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import csv_row
+from repro.graphs import degree_stats, make_suite
+
+
+def bench(scale: float = 0.1, quiet=False):
+    rows = []
+    for name, g in make_suite(scale=scale).items():
+        s = degree_stats(g)
+        rows.append(s)
+        if not quiet:
+            print(csv_row(s["name"], s["nodes"], s["edges"], s["d_min"],
+                          s["d_median"], s["d_max"]))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.1)
+    args = ap.parse_args()
+    print("graph,nodes,edges,d_min,d_median,d_max")
+    bench(args.scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark helpers: wall-clock timing with warmup + CSV output."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
+    """Median wall seconds of fn(*args) (jax-blocking)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def csv_row(*cells) -> str:
+    return ",".join(str(c) for c in cells)
+
+
+def geomean(xs) -> float:
+    import math
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0

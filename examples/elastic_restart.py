@@ -1,0 +1,75 @@
+"""Fault-tolerance demo: train -> simulated node failure -> elastic
+restart on a smaller mesh from the latest complete checkpoint.
+
+Because checkpoints are mesh-agnostic (reshard-on-restore) and the data
+pipeline is a pure function of (seed, step), the restarted job consumes
+exactly the batches it would have seen. Run:
+
+  PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.configs import get_arch
+from repro.data.pipelines import TokenPipeline
+from repro.ft.elastic import StragglerMonitor, survivors_mesh
+from repro.models import transformer as tfm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+CKPT = "/tmp/elastic_demo_ckpt"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+cfg = get_arch("minitron-4b").make_smoke()
+opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+pipe = TokenPipeline(vocab=cfg.vocab, seq_len=64, global_batch=8)
+
+
+@jax.jit
+def step(params, opt, batch):
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: tfm.loss_fn(p, batch, cfg), has_aux=True)(params)
+    p2, o2, m = adamw_update(grads, opt, params, opt_cfg)
+    return p2, o2, loss
+
+
+print("== phase 1: train on the 'full cluster' ==")
+params, _ = tfm.init_params(cfg, jax.random.PRNGKey(0))
+opt = adamw_init(params)
+ck = AsyncCheckpointer(CKPT, keep=2)
+losses = {}
+for s in range(30):
+    params, opt, loss = step(params, opt, pipe.batch_at(s))
+    losses[s] = float(loss)
+    if s and s % 10 == 0:
+        ck.save(s, {"params": params, "opt": opt})
+ck.wait()
+print(f"  trained to step 29, loss {losses[29]:.4f}; "
+      f"checkpoints at {sorted(os.listdir(CKPT))}")
+
+print("== phase 2: simulate losing 8 hosts of a 2x16x16 pod ==")
+new_shape = survivors_mesh((2, 16, 16), failed_hosts=list(range(8)),
+                           chips_per_host=4)
+print(f"  survivors re-mesh: (2, 16, 16) -> {new_shape}")
+mon = StragglerMonitor(n_hosts=4)
+for h, t in [(0, 1.0), (1, 1.0), (2, 1.05), (3, 1.9)]:
+    for _ in range(5):
+        mon.observe(h, t)
+print(f"  straggler detection: hosts {mon.stragglers()} rebalance -> "
+      f"{mon.rebalance_batch(64, granule=4)} (of 64)")
+
+print("== phase 3: elastic restart from the latest complete step ==")
+last = latest_step(CKPT)
+params2, _ = tfm.init_params(cfg, jax.random.PRNGKey(0))   # fresh process
+opt2 = adamw_init(params2)
+state = restore_checkpoint(CKPT, last, {"params": params2, "opt": opt2})
+params2, opt2 = state["params"], state["opt"]
+for s in range(last + 1, 30):
+    params2, opt2, loss2 = step(params2, opt2, pipe.batch_at(s))
+print(f"  resumed at step {last + 1}; replayed to 29: "
+      f"loss {float(loss2):.4f} (original run: {losses[29]:.4f})")
+assert abs(float(loss2) - losses[29]) < 1e-4, "deterministic replay broke"
+print("  deterministic replay: loss matches the uninterrupted run. OK")

@@ -1,0 +1,11 @@
+"""Serve a small LM with batched requests (prefill + decode loop).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve", "--arch",
+     "qwen3-moe-30b-a3b", "--smoke", "--batch", "8", "--prompt-len", "64",
+     "--gen", "32"]))

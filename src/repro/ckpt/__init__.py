@@ -1,0 +1,3 @@
+"""Sharded checkpointing with async write and reshard-on-restore."""
+from repro.ckpt.checkpoint import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, AsyncCheckpointer, latest_step)

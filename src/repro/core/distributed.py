@@ -1,0 +1,117 @@
+"""Explicitly-distributed coloring engine (shard_map).
+
+Owner-computes partitioning of the paper's dense (topology-driven) step:
+
+  * each shard owns a contiguous node block (graphs.partition.repartition
+    balances total degree across blocks so no shard owns all hubs —
+    straggler mitigation at the data layout level);
+  * the ONLY cross-shard value is the color vector: one all-gather of
+    int32[N] per iteration (DESIGN.md §2 — the TPU analogue of the GPU's
+    global color array). 4N bytes/device/iter, independent of edge count;
+  * worklist state (mask/items/count) stays shard-local; the hybrid
+    switch decision needs one scalar psum (= IrGL Pipe's size check).
+
+This is the hand-written counterpart of the GSPMD-partitioned
+``ipgc.dense_step`` used by the dry-run; on one device it is bit-identical
+to the reference engine (tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import ipgc
+from repro.core.worklist import Worklist
+from repro.graphs.csr import NO_COLOR, PAD_COLOR
+
+
+def make_dist_dense_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
+                         *, window: int = 128, n_global: int | None = None):
+    """Build a shard_map'd dense step.
+
+    ig_local: the IPGCGraph whose per-shard row blocks will be fed in
+    (arrays sharded over ``node_axes`` on the row dim; `priority`,
+    tail arrays replicated).
+    Returns step(colors_global, base, wl) -> (colors_global, base, wl)
+    where colors_global is the replicated int32[N+1] vector and
+    base/mask/items are node-sharded.
+    """
+    n = n_global or ig_local.n_nodes
+
+    def local_step(colors, base_l, mask_l, ell_l, deg_l, hubslot_l,
+                   prio, tail_src, tail_dst, tail_valid, tail_slot, hub_ids):
+        # block offset of this shard
+        idx = 0
+        mult = 1
+        for ax in reversed(node_axes):
+            idx = idx + jax.lax.axis_index(ax) * mult
+            mult = mult * jax.lax.axis_size(ax)
+        blk = ell_l.shape[0]
+        row_ids = idx * blk + jnp.arange(blk, dtype=jnp.int32)
+
+        active = mask_l
+        nc = colors[ell_l]                              # local gather
+        base_rows = base_l
+        ig = ipgc.IPGCGraph(
+            n_nodes=n, ell_width=ig_local.ell_width, n_hub=ig_local.n_hub,
+            ell_idx=ell_l, degrees=deg_l, priority=prio,
+            tail_src=tail_src, tail_dst=tail_dst, tail_valid=tail_valid,
+            tail_slot=tail_slot, hub_slot=hubslot_l, hub_ids=hub_ids)
+        if ig_local.n_hub > 0:
+            hub_forb = ipgc._hub_forbidden(ig, colors, base_pad := jnp.zeros(
+                (n,), jnp.int32).at[row_ids].set(base_l), window)
+            extra = hub_forb[jnp.minimum(hubslot_l, ig_local.n_hub)]
+        else:
+            extra = None
+        new_c, new_base, newly = ipgc._mex_rows(
+            ig, nc, base_rows, active, colors[row_ids], extra, window, "jnp")
+
+        # exchange: scatter local colors into the global vector, all-gather
+        part = jnp.full((n + 1,), PAD_COLOR, jnp.int32)
+        part = part.at[row_ids].set(
+            jnp.where(active, new_c, colors[row_ids]))
+        # additive all-gather trick: psum of disjoint one-shard updates
+        delta = jnp.where(part == PAD_COLOR, 0,
+                          part - colors).astype(jnp.int32)
+        colors2 = colors + jax.lax.psum(delta, node_axes)
+
+        lose = ipgc._lose_rows(ig, ell_l, row_ids, colors2, newly, "jnp")
+        if ig_local.n_hub > 0:
+            newly_g = jnp.zeros((n + 1,), bool).at[row_ids].set(newly)
+            newly_g = jax.lax.psum(newly_g.astype(jnp.int32),
+                                   node_axes).astype(bool)
+            hub_l = ipgc._hub_lose(ig, colors2, newly_g)
+            lose = lose | hub_l[jnp.minimum(hubslot_l, ig_local.n_hub)]
+        # uncolor losers (their writes were included in colors2)
+        undo = jnp.zeros((n + 1,), jnp.int32).at[row_ids].set(
+            jnp.where(lose, NO_COLOR - colors2[row_ids], 0))
+        colors3 = colors2 + jax.lax.psum(undo, node_axes)
+
+        still = lose | (active & ~newly)
+        (items_l,) = jnp.nonzero(still, size=blk, fill_value=blk)
+        items_l = jnp.where(items_l < blk, idx * blk + items_l, n)
+        count = jax.lax.psum(still.sum(dtype=jnp.int32), node_axes)
+        return colors3, new_base, still, items_l.astype(jnp.int32), count
+
+    na = node_axes
+    fn = shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(), P(na), P(na), P(na, None), P(na), P(na),
+                  P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), P(na), P(na), P(na), P()),
+        check_rep=False)
+
+    @jax.jit
+    def step(colors, base, wl: Worklist):
+        colors3, base2, mask, items, count = fn(
+            colors, base, wl.mask, ig_local.ell_idx, ig_local.degrees,
+            ig_local.hub_slot, ig_local.priority, ig_local.tail_src,
+            ig_local.tail_dst, ig_local.tail_valid, ig_local.tail_slot,
+            ig_local.hub_ids)
+        return colors3, base2, Worklist(mask=mask, items=items, count=count)
+
+    return step

@@ -1,0 +1,154 @@
+"""Hybrid coloring engine — the host-side analogue of IrGL's ``Pipe``.
+
+The device never sees dynamic shapes; the host reads back one scalar
+(``count``) per iteration — exactly the information IrGL's Pipe uses for its
+worklist-size check — picks dense vs sparse (the paper's H policy) and a
+capacity bucket, and dispatches the jitted step. The worklist state is
+maintained by *both* steps (the paper's contribution), so there is no
+rebuild cost at a switch: we only ever *slice* the already-compacted items
+array down to a smaller bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ipgc
+from repro.core.policy import AutoTuned, Policy, Timer, make_policy
+from repro.core.worklist import (Worklist, bucket_capacities, full_worklist,
+                                 pick_bucket)
+from repro.graphs.csr import Graph
+
+
+@dataclasses.dataclass
+class ColoringResult:
+    colors: np.ndarray          # [N] final colors (>= 0 everywhere)
+    n_colors: int
+    iterations: int
+    mode_trace: str             # 'D'/'S' per iteration
+    counts: list[int]           # worklist size per iteration (pre-step)
+    tti: list[float]            # wall seconds per iteration
+    total_seconds: float
+
+
+def adaptive_window(g: Graph, *, lo: int = 32, hi: int = 128) -> int:
+    """Color-window heuristic (beyond-paper optimisation, EXPERIMENTS.md
+    §Perf): mex(v) <= deg(v), and IPGC's chromatic number tracks the
+    *typical* degree, so a window ~2x the median degree covers almost all
+    assignments in one pass while hub nodes advance their base. Cuts the
+    O(C*W) per-iteration mex term up to 4x on low-degree graphs."""
+    import numpy as np
+    med = int(np.median(np.asarray(g.arrays.degrees)))
+    return int(min(max(-(-2 * (med + 1) // 32) * 32, lo), hi))
+
+
+def color(
+    g: Graph | ipgc.IPGCGraph,
+    *,
+    mode: str = "hybrid",
+    h: float = 0.6,
+    window: int | str = "auto",   # paper-faithful: 128 (EXPERIMENTS §Perf A)
+    impl: str = "jnp",
+    bucket_ratio: int = 2,        # paper-faithful: 4
+
+    max_iter: int = 10_000,
+    priority: str = "hash",
+    policy: Policy | None = None,
+    collect_tti: bool = False,
+) -> ColoringResult:
+    if window == "auto":
+        assert isinstance(g, Graph)
+        window = adaptive_window(g)
+    ig = ipgc.prepare(g, priority=priority) if isinstance(g, Graph) else g
+    n = ig.n_nodes
+    pol = policy or make_policy(mode, h)
+    caps = bucket_capacities(n, ratio=bucket_ratio)
+
+    colors = ipgc.init_colors(n)
+    base = jnp.zeros((n,), dtype=jnp.int32)
+    wl = full_worklist(n)
+    count = n
+
+    trace: list[str] = []
+    counts: list[int] = []
+    tti: list[float] = []
+    t_start = time.perf_counter()
+    it = 0
+    while count > 0 and it < max_iter:
+        use_dense = bool(pol(count, n))
+        counts.append(count)
+        with Timer() as t:
+            if use_dense:
+                colors, base, wl = ipgc.dense_step(
+                    ig, colors, base, wl, window=window, impl=impl)
+            else:
+                cap = pick_bucket(caps, count)
+                if wl.capacity > cap:
+                    wl = Worklist(mask=wl.mask, items=wl.items[:cap],
+                                  count=wl.count)
+                colors, base, wl = ipgc.sparse_step(
+                    ig, colors, base, wl, window=window, impl=impl)
+            count = int(wl.count)  # the Pipe's single scalar read-back
+        trace.append("D" if use_dense else "S")
+        if collect_tti:
+            tti.append(t.seconds)
+        if isinstance(pol, AutoTuned):
+            pol.observe(use_dense, counts[-1], n, t.seconds)
+        it += 1
+
+    total = time.perf_counter() - t_start
+    final = np.asarray(colors[:n])
+    n_colors = int(final.max()) + 1 if final.size else 0
+    return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
+                          mode_trace="".join(trace), counts=counts, tti=tti,
+                          total_seconds=total)
+
+
+def color_outlined(
+    g: Graph,
+    *,
+    window: int | str = "auto",
+    impl: str = "jnp",
+    max_iter: int = 10_000,
+    priority: str = "hash",
+) -> ColoringResult:
+    """IrGL "iteration outlining": the whole Pipe runs as ONE device
+    program (``lax.while_loop`` over dense steps) — zero host round-trips.
+
+    This is the topology-driven engine with the loop outlined; the hybrid
+    engine cannot be fully outlined because capacity bucketing needs the
+    host to re-dispatch at a different static shape (exactly the one
+    scalar read IrGL's Pipe performs). Useful when the graph is small or
+    host-device latency dominates (many tiny iterations).
+    """
+    import jax
+
+    if window == "auto":
+        window = adaptive_window(g)
+    ig = ipgc.prepare(g, priority=priority)
+    n = ig.n_nodes
+    t0 = time.perf_counter()
+
+    def cond(state):
+        _, _, wl, it = state
+        return (wl.count > 0) & (it < max_iter)
+
+    def body(state):
+        colors, base, wl, it = state
+        colors, base, wl = ipgc.dense_step(ig, colors, base, wl,
+                                           window=window, impl=impl)
+        return colors, base, wl, it + 1
+
+    state = (ipgc.init_colors(n), jnp.zeros((n,), jnp.int32),
+             full_worklist(n), jnp.zeros((), jnp.int32))
+    colors, _, wl, it = jax.lax.while_loop(cond, body, state)
+    colors = np.asarray(colors[:n])
+    total = time.perf_counter() - t0
+    iters = int(it)
+    return ColoringResult(colors=colors, n_colors=int(colors.max()) + 1,
+                          iterations=iters, mode_trace="O" * iters,
+                          counts=[], tti=[], total_seconds=total)

@@ -1,0 +1,300 @@
+"""IPGC — Iterative Parallel Graph Coloring (Deveci et al. 2016), the
+algorithm the paper hybridizes.
+
+Two speculative steps per iteration (paper §II-C):
+  1. assign: every *active* (uncolored) node takes the mex of its
+     neighbours' colors — computed over a sliding color window
+     ``[base, base+W)`` so memory stays O(W) per node even for power-law
+     hubs (exact mex; a node whose window is exhausted stays active with
+     an advanced base).
+  2. resolve: if an edge's endpoints were assigned the same color,
+     exactly one endpoint (the one losing a static random-hash priority
+     tie-break) is uncolored and stays in the worklist.
+
+Every function exists in two phases:
+  *dense*  (topology-driven): operates on all N rows, reads the active mask.
+  *sparse* (data-driven): operates on a gathered worklist of capacity C.
+
+Both phases maintain the full worklist state — the paper's contribution.
+
+``impl="pallas"`` routes the per-row window/mex and conflict computations
+through the Pallas TPU kernels (validated in interpret mode on CPU);
+``impl="jnp"`` is the pure-jnp reference path used for CPU benchmarks.
+
+Hub (degree > ELL width) bookkeeping: ELL rows cover the first K
+neighbours; the COO tail covers the rest. Tail contributions are folded in
+through a compact per-hub forbidden/conflict side-channel so the sparse
+phase stays O(C·K + T + C·W) — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import Graph, NO_COLOR, PAD_COLOR
+from repro.core.worklist import Worklist, compact_items, compact_mask
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IPGCGraph:
+    """Device-side graph prepared for the coloring engine."""
+
+    # static metadata
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    ell_width: int = dataclasses.field(metadata=dict(static=True))
+    n_hub: int = dataclasses.field(metadata=dict(static=True))
+    # arrays
+    ell_idx: jax.Array        # i32[N, K], pad = N
+    degrees: jax.Array        # i32[N]
+    priority: jax.Array       # i32[N+1], pad = -1
+    tail_src: jax.Array       # i32[T] clipped to [0, N-1]
+    tail_dst: jax.Array       # i32[T], pad = N
+    tail_valid: jax.Array     # bool[T]
+    tail_slot: jax.Array      # i32[T] hub slot of tail_src
+    hub_slot: jax.Array       # i32[N], n_hub for non-hub nodes
+    hub_ids: jax.Array        # i32[max(n_hub,1)]
+
+
+def prepare(g: Graph, *, priority: str = "hash") -> IPGCGraph:
+    """priority="hash" (paper engine) or "id" (Kokkos-VB-style tie-break)."""
+    a = g.arrays
+    n = g.n_nodes
+    deg = np.asarray(a.degrees)
+    hub_ids = np.nonzero(deg > a.ell_width)[0].astype(np.int32)
+    n_hub = len(hub_ids)
+    hub_slot = np.full(n, n_hub, dtype=np.int32)
+    hub_slot[hub_ids] = np.arange(n_hub, dtype=np.int32)
+    tail_src = np.asarray(a.tail_src)
+    tail_valid = tail_src < n
+    tail_src_safe = np.minimum(tail_src, n - 1)
+    pr = np.asarray(a.priority) if priority == "hash" else np.arange(n, dtype=np.int32)
+    prio = np.concatenate([pr, np.full(1, -1, np.int32)])
+    return IPGCGraph(
+        n_nodes=n,
+        ell_width=a.ell_width,
+        n_hub=n_hub,
+        ell_idx=jnp.asarray(a.ell_idx),
+        degrees=jnp.asarray(deg),
+        priority=jnp.asarray(prio),
+        tail_src=jnp.asarray(tail_src_safe),
+        tail_dst=jnp.asarray(a.tail_dst),
+        tail_valid=jnp.asarray(tail_valid),
+        tail_slot=jnp.asarray(hub_slot[tail_src_safe]),
+        hub_slot=jnp.asarray(hub_slot),
+        hub_ids=jnp.asarray(hub_ids if n_hub else np.zeros(1, np.int32)),
+    )
+
+
+def _force_hub() -> bool:
+    import os
+    return os.environ.get("REPRO_IPGC_FORCE_HUB", "0") == "1"
+
+
+def init_colors(n_nodes: int) -> jax.Array:
+    """int32[N+1]; slot N is the gather sentinel (PAD_COLOR)."""
+    c = jnp.full((n_nodes + 1,), NO_COLOR, dtype=jnp.int32)
+    return c.at[n_nodes].set(PAD_COLOR)
+
+
+# ---------------------------------------------------------------------------
+# forbidden-window helpers
+# ---------------------------------------------------------------------------
+
+def _scatter_forbidden(rel: jax.Array, ok: jax.Array, n_rows: int,
+                       window: int) -> jax.Array:
+    """OR-scatter row-relative colors into a (n_rows, window) bitmap."""
+    if n_rows * window < 2 ** 31 - 1:
+        rows = jnp.arange(n_rows, dtype=jnp.int32)[:, None]
+        flat = jnp.where(ok, rows * window + rel, n_rows * window)
+        forb = jnp.zeros((n_rows * window + 1,), bool)
+        forb = forb.at[flat.reshape(-1)].set(True, mode="drop")
+        return forb[:-1].reshape(n_rows, window)
+    # huge-graph path (>2^31 cells): 2-D scatter, no flat index
+    rows = jnp.broadcast_to(
+        jnp.arange(n_rows, dtype=jnp.int32)[:, None], rel.shape)
+    rows = jnp.where(ok, rows, n_rows)
+    rel_c = jnp.clip(rel, 0, window - 1)
+    forb = jnp.zeros((n_rows + 1, window), bool)
+    forb = forb.at[rows, rel_c].set(True, mode="drop")
+    return forb[:n_rows]
+
+
+def _ell_forbidden(nc: jax.Array, base_rows: jax.Array, window: int) -> jax.Array:
+    rel = nc - base_rows[:, None]
+    ok = (nc >= 0) & (rel >= 0) & (rel < window)
+    return _scatter_forbidden(rel, ok, nc.shape[0], window)
+
+
+def _hub_forbidden(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+                   window: int) -> jax.Array:
+    """(n_hub+1, W) forbidden bitmap from COO-tail edges; row n_hub is a
+    guaranteed-False row that non-hub nodes gather."""
+    nh = ig.n_hub
+    tc = colors[ig.tail_dst]               # PAD_COLOR for padded entries
+    rel = tc - base[ig.tail_src]
+    ok = ig.tail_valid & (tc >= 0) & (rel >= 0) & (rel < window)
+    flat = jnp.where(ok, ig.tail_slot * window + rel, (nh + 1) * window)
+    forb = jnp.zeros(((nh + 1) * window + 1,), bool)
+    forb = forb.at[flat].set(True, mode="drop")
+    return forb[:-1].reshape(nh + 1, window)
+
+
+def _mex_from_forbidden(forb: jax.Array, active: jax.Array,
+                        base_rows: jax.Array, colors_rows: jax.Array,
+                        window: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pick first free color in the window; advance base when exhausted."""
+    free = (~forb) & active[:, None]
+    has = free.any(axis=1)
+    first = jnp.argmax(free, axis=1).astype(jnp.int32)
+    new_colors = jnp.where(active & has, base_rows + first, colors_rows)
+    new_base = jnp.where(active & ~has, base_rows + window, base_rows)
+    newly = active & has
+    return new_colors, new_base, newly
+
+
+def _mex_rows(ig: IPGCGraph, nc: jax.Array, base_rows: jax.Array,
+              active: jax.Array, colors_rows: jax.Array, extra_forb: jax.Array,
+              window: int, impl: str):
+    """Row-wise windowed mex; ``impl`` picks jnp or the Pallas kernel."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        if extra_forb is None:
+            extra_forb = jnp.zeros((nc.shape[0], window), bool)
+        first, has = kops.mex_window(nc, base_rows, extra_forb, window)
+        new_colors = jnp.where(active & has, base_rows + first, colors_rows)
+        new_base = jnp.where(active & ~has, base_rows + window, base_rows)
+        return new_colors, new_base, active & has
+    forb = _ell_forbidden(nc, base_rows, window)
+    if extra_forb is not None:
+        forb = forb | extra_forb
+    return _mex_from_forbidden(forb, active, base_rows, colors_rows, window)
+
+
+# ---------------------------------------------------------------------------
+# conflict helpers
+# ---------------------------------------------------------------------------
+
+def _lose_rows(ig: IPGCGraph, ell_rows: jax.Array, row_ids: jax.Array,
+               colors: jax.Array, newly: jax.Array, impl: str) -> jax.Array:
+    """Row u loses iff some neighbour v has the same color and a higher
+    (priority, id). Only newly-colored rows can conflict (mex excluded all
+    surviving older colors)."""
+    cu = colors[row_ids]
+    pu = ig.priority[row_ids]
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        nc = colors[ell_rows]
+        npr = ig.priority[ell_rows]
+        return kops.conflict(nc, npr, ell_rows, cu, pu, row_ids) & newly
+    nc = colors[ell_rows]
+    npr = ig.priority[ell_rows]
+    same = (nc == cu[:, None]) & (cu >= 0)[:, None]
+    higher = (npr > pu[:, None]) | ((npr == pu[:, None]) & (ell_rows > row_ids[:, None]))
+    return (same & higher).any(axis=1) & newly
+
+
+def _hub_lose(ig: IPGCGraph, colors: jax.Array, newly_full: jax.Array) -> jax.Array:
+    """(n_hub+1,) conflict flags for hub rows from COO-tail edges."""
+    nh = ig.n_hub
+    cu = colors[ig.tail_src]
+    cv = colors[ig.tail_dst]
+    pu = ig.priority[ig.tail_src]
+    pv = ig.priority[ig.tail_dst]
+    lose = (ig.tail_valid & (cu >= 0) & (cu == cv) & newly_full[ig.tail_src]
+            & ((pv > pu) | ((pv == pu) & (ig.tail_dst > ig.tail_src))))
+    out = jnp.zeros((nh + 1,), bool)
+    return out.at[jnp.where(lose, ig.tail_slot, nh)].max(lose)
+
+
+# ---------------------------------------------------------------------------
+# dense (topology-driven) step — sweeps all N rows, maintains the worklist
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("window", "impl"))
+def dense_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+               wl: Worklist, *, window: int = 128, impl: str = "jnp"
+               ) -> tuple[jax.Array, jax.Array, Worklist]:
+    n = ig.n_nodes
+    active = wl.mask
+    row_ids = jnp.arange(n, dtype=jnp.int32)
+    # static: hub side-channel compiled out entirely for regular graphs
+    # (REPRO_IPGC_FORCE_HUB=1 restores the unconditional path for A/B runs)
+    has_hubs = ig.n_hub > 0 or _force_hub()
+
+    # --- assign (speculative windowed mex) ---
+    nc = colors[ig.ell_idx]
+    if has_hubs:
+        hub_forb = _hub_forbidden(ig, colors, base, window)      # (nh+1, W)
+        extra = hub_forb[jnp.minimum(ig.hub_slot, ig.n_hub)]     # (N, W)
+    else:
+        extra = None
+    new_c, new_base, newly = _mex_rows(
+        ig, nc, base, active, colors[:n], extra, window, impl)
+    colors2 = colors.at[:n].set(new_c)
+
+    # --- resolve (uncolor exactly one endpoint per conflict edge) ---
+    lose = _lose_rows(ig, ig.ell_idx, row_ids, colors2, newly, impl)
+    if has_hubs:
+        newly_full = jnp.concatenate([newly, jnp.zeros((1,), bool)])
+        hub_l = _hub_lose(ig, colors2, newly_full)
+        lose = lose | hub_l[jnp.minimum(ig.hub_slot, ig.n_hub)]
+    colors3 = colors2.at[:n].set(jnp.where(lose, NO_COLOR, colors2[:n]))
+
+    # --- maintain the worklist (the paper's contribution: also in dense mode)
+    still = lose | (active & ~newly)
+    items, count = compact_mask(still, wl.items.shape[0], n)
+    return colors3, new_base, Worklist(mask=still, items=items, count=count)
+
+
+# ---------------------------------------------------------------------------
+# sparse (data-driven) step — gathers C worklist rows, O(C*K + T + C*W)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("window", "impl"))
+def sparse_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+                wl: Worklist, *, window: int = 128, impl: str = "jnp"
+                ) -> tuple[jax.Array, jax.Array, Worklist]:
+    n = ig.n_nodes
+    items = wl.items
+    valid = items < n
+    safe = jnp.where(valid, items, 0)
+
+    # --- assign ---
+    has_hubs = ig.n_hub > 0 or _force_hub()
+    ell_rows = jnp.where(valid[:, None], ig.ell_idx[safe], n)    # (C, K)
+    nc = colors[ell_rows]
+    base_rows = base[safe]
+    if has_hubs:
+        hub_forb = _hub_forbidden(ig, colors, base, window)
+        extra = hub_forb[jnp.minimum(ig.hub_slot[safe], ig.n_hub)]
+    else:
+        extra = None
+    new_c, new_base_rows, newly = _mex_rows(
+        ig, nc, base_rows, valid, colors[safe], extra, window, impl)
+    colors2 = colors.at[jnp.where(valid, items, n)].set(
+        jnp.where(valid, new_c, PAD_COLOR))
+    colors2 = colors2.at[n].set(PAD_COLOR)
+    base2 = base.at[safe].set(jnp.where(valid, new_base_rows, base[safe]))
+
+    # --- resolve ---
+    lose = _lose_rows(ig, ell_rows, jnp.where(valid, items, n), colors2,
+                      newly, impl)
+    if has_hubs:
+        newly_full = jnp.zeros((n + 1,), bool).at[
+            jnp.where(newly, items, n)].set(newly, mode="drop")[: n + 1]
+        hub_l = _hub_lose(ig, colors2, newly_full)
+        lose = lose | (hub_l[jnp.minimum(ig.hub_slot[safe], ig.n_hub)] & valid)
+    colors3 = colors2.at[jnp.where(lose, items, n)].set(
+        jnp.where(lose, NO_COLOR, colors2[jnp.minimum(items, n)]), mode="drop")
+    colors3 = colors3.at[n].set(PAD_COLOR)
+
+    # --- maintain the worklist in O(C) ---
+    still = lose | (valid & ~newly)
+    new_items, count = compact_items(items, still, n)
+    mask = wl.mask.at[safe].set(jnp.where(valid, still, wl.mask[safe]))
+    return colors3, base2, Worklist(mask=mask, items=new_items, count=count)

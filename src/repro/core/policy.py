@@ -1,0 +1,81 @@
+"""Hybrid switching policies.
+
+The paper: pick topology-driven when worklist size > H * |V| (H tuned
+empirically, ~0.6 on a Quadro P5000). We provide the paper's fixed-H policy,
+the two degenerate policies (the baselines), and an auto-tuned policy that
+estimates the crossover from two timed probes — the "analytical H" the
+paper lists as future work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+# A policy maps (count, n_nodes) -> True for dense (topology) mode.
+Policy = Callable[[int, int], bool]
+
+
+def fixed_h(h: float = 0.6) -> Policy:
+    def pol(count: int, n: int) -> bool:
+        return count > h * n
+    return pol
+
+
+def always_dense() -> Policy:
+    return lambda count, n: True
+
+
+def always_sparse() -> Policy:
+    return lambda count, n: False
+
+
+@dataclasses.dataclass
+class AutoTuned:
+    """Estimate H from per-mode cost models fitted online.
+
+    Model: dense iteration cost ~ a_d (constant in count);
+    sparse iteration cost ~ a_s + b_s * bucket(count).
+    After both modes have >=1 timed sample, switch to sparse as soon as the
+    predicted sparse cost undercuts the dense cost. Until then follow the
+    paper's fixed H prior.
+    """
+
+    prior_h: float = 0.6
+    dense_cost: float | None = None
+    sparse_unit: float | None = None  # seconds per worklist slot
+
+    def __call__(self, count: int, n: int) -> bool:
+        if self.dense_cost is None or self.sparse_unit is None:
+            return count > self.prior_h * n
+        return self.sparse_unit * count > self.dense_cost
+
+    def observe(self, dense: bool, count: int, n: int, seconds: float) -> None:
+        if dense:
+            self.dense_cost = seconds if self.dense_cost is None else (
+                0.7 * self.dense_cost + 0.3 * seconds)
+        else:
+            unit = seconds / max(count, 1)
+            self.sparse_unit = unit if self.sparse_unit is None else (
+                0.7 * self.sparse_unit + 0.3 * unit)
+
+
+def make_policy(mode: str, h: float = 0.6) -> Policy:
+    if mode == "hybrid":
+        return fixed_h(h)
+    if mode == "hybrid-auto":
+        return AutoTuned(prior_h=h)
+    if mode in ("topology", "dense"):
+        return always_dense()
+    if mode in ("data", "sparse", "plain"):
+        return always_sparse()
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

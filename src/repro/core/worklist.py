@@ -1,0 +1,84 @@
+"""Persistent worklist state — the paper's central data structure.
+
+The paper's contribution: the worklist is maintained through *all*
+iterations, in both topology-driven and data-driven phases, so mode
+switches are free. On TPU the "push with atomics" idiom becomes parallel
+stream compaction (see DESIGN.md §2); the dual representation is:
+
+  mask  : bool[N]   dense active flags   (what topology-driven sweeps read)
+  items : int32[C]  compacted active ids (what data-driven gathers read)
+  count : int32[]   number of valid entries in ``items``
+
+Both step kernels emit *both* representations. Capacity ``C`` is bucketed
+(static shapes under jit); the active set of IPGC shrinks monotonically, so
+buckets only ever step down.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Worklist(NamedTuple):
+    mask: jax.Array    # bool[N]
+    items: jax.Array   # int32[C], padded with N
+    count: jax.Array   # int32[]
+
+    @property
+    def capacity(self) -> int:
+        return self.items.shape[0]
+
+
+def full_worklist(n_nodes: int) -> Worklist:
+    """All nodes active (IPGC initial state: everything uncolored)."""
+    return Worklist(
+        mask=jnp.ones((n_nodes,), dtype=bool),
+        items=jnp.arange(n_nodes, dtype=jnp.int32),
+        count=jnp.asarray(n_nodes, dtype=jnp.int32),
+    )
+
+
+def compact_mask(mask: jax.Array, capacity: int, n_nodes: int) -> tuple[jax.Array, jax.Array]:
+    """Dense mask -> compacted items (the atomic-push replacement).
+
+    jnp reference implementation; ``kernels/compact.py`` is the Pallas
+    version with a sequential-grid carry.
+    """
+    (idx,) = jnp.nonzero(mask, size=capacity, fill_value=n_nodes)
+    return idx.astype(jnp.int32), mask.sum(dtype=jnp.int32)
+
+
+def compact_items(items: jax.Array, keep: jax.Array, n_nodes: int) -> tuple[jax.Array, jax.Array]:
+    """Filter the existing worklist in O(C) — the data-driven phase never
+    touches O(N) state to rebuild its own worklist."""
+    c = items.shape[0]
+    (pos,) = jnp.nonzero(keep, size=c, fill_value=c)
+    items_ext = jnp.concatenate([items, jnp.full((1,), n_nodes, items.dtype)])
+    return items_ext[pos], keep.sum(dtype=jnp.int32)
+
+
+def bucket_capacities(n_nodes: int, *, ratio: int = 4, floor: int = 1024) -> list[int]:
+    """Geometric capacity ladder N, N/r, N/r^2, ... (static-shape buckets)."""
+    caps = []
+    c = n_nodes
+    while c > floor:
+        caps.append(int(-(-c // 8) * 8))
+        c //= ratio
+    caps.append(min(int(-(-floor // 8) * 8), int(-(-n_nodes // 8) * 8)))
+    # dedupe, descending
+    out: list[int] = []
+    for x in caps:
+        if not out or x < out[-1]:
+            out.append(x)
+    return out
+
+
+def pick_bucket(caps: list[int], count: int) -> int:
+    """Smallest capacity >= count (host-side Pipe decision)."""
+    best = caps[0]
+    for c in caps:
+        if c >= count:
+            best = c
+    return best

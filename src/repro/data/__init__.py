@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipelines (LM tokens, recsys batches,
+graph batches) with per-host sharding."""

@@ -1,0 +1,1 @@
+"""Fault tolerance: elastic re-meshing, straggler mitigation."""

@@ -1,0 +1,11 @@
+"""Graph substrate: CSR/ELL/COO structures, synthetic suite, partitioning, sampling."""
+from repro.graphs.csr import (  # noqa: F401
+    Graph,
+    GraphArrays,
+    build_graph,
+    degree_stats,
+    NO_COLOR,
+    PAD_COLOR,
+    validate_coloring,
+)
+from repro.graphs.generators import SUITE_SPECS, make_suite, make_graph  # noqa: F401

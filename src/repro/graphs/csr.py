@@ -1,0 +1,171 @@
+"""Graph data structures.
+
+Host-side construction is numpy; device code consumes a ``GraphArrays``
+pytree of jnp arrays.
+
+Layouts
+-------
+CSR      row_ptr[N+1], col_idx[E]     — segment-op paths, sampling.
+ELL      ell_idx[N, K] (pad = N)      — Pallas tile paths. K is the ELL
+                                         width (degree cap, multiple of 8).
+COO tail tail_src[T], tail_dst[T]     — entries of nodes whose degree
+                                         exceeds K (hub overflow). Padded
+                                         with (N, N).
+
+Color conventions
+-----------------
+colors : int32[N + 1]. colors[N] is the sentinel slot (PAD_COLOR) so that
+gathers through ELL padding are branch-free.
+NO_COLOR  = -1  (uncolored / active)
+PAD_COLOR = -2  (sentinel; never equals a real color or NO_COLOR)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+NO_COLOR = np.int32(-1)
+PAD_COLOR = np.int32(-2)
+
+
+class GraphArrays(NamedTuple):
+    """Device-side graph pytree (all int32 jnp/np arrays)."""
+
+    n_nodes: int          # static
+    n_edges: int          # static (directed entry count = 2x undirected)
+    ell_width: int        # static
+    row_ptr: np.ndarray   # [N+1]
+    col_idx: np.ndarray   # [E]
+    degrees: np.ndarray   # [N]
+    ell_idx: np.ndarray   # [N, K] neighbour ids, padded with N
+    tail_src: np.ndarray  # [T] hub-overflow edges (padded with N)
+    tail_dst: np.ndarray  # [T]
+    priority: np.ndarray  # [N] random tie-break priorities (static hash)
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Host-side graph with metadata."""
+
+    name: str
+    n_nodes: int
+    n_edges: int          # undirected edge count
+    arrays: GraphArrays
+
+    @property
+    def ell_width(self) -> int:
+        return self.arrays.ell_width
+
+
+def _splitmix32(x: np.ndarray) -> np.ndarray:
+    """Deterministic per-node hash used for conflict-resolution priority."""
+    x = x.astype(np.uint32)
+    x = (x + np.uint32(0x9E3779B9)) & np.uint32(0xFFFFFFFF)
+    x ^= x >> np.uint32(16)
+    x = (x * np.uint32(0x85EBCA6B)) & np.uint32(0xFFFFFFFF)
+    x ^= x >> np.uint32(13)
+    x = (x * np.uint32(0xC2B2AE35)) & np.uint32(0xFFFFFFFF)
+    x ^= x >> np.uint32(16)
+    # keep positive int32 so comparisons are cheap on TPU
+    return (x >> np.uint32(1)).astype(np.int32)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def build_graph(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_nodes: int,
+    *,
+    name: str = "graph",
+    ell_cap: int = 128,
+    symmetrize: bool = True,
+) -> Graph:
+    """Build CSR + ELL + COO-tail from an edge list.
+
+    Pre-processing per the paper: self loops and duplicate edges removed.
+    ``ell_cap`` bounds the ELL width; rows with degree > width spill the
+    excess into the COO tail.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if symmetrize:
+        s = np.concatenate([src, dst])
+        d = np.concatenate([dst, src])
+    else:
+        s, d = src, dst
+    keep = s != d  # drop self loops
+    s, d = s[keep], d[keep]
+    # dedup
+    key = s * n_nodes + d
+    _, uniq = np.unique(key, return_index=True)
+    s, d = s[uniq], d[uniq]
+    order = np.lexsort((d, s))
+    s, d = s[order], d[order]
+
+    e = len(s)
+    degrees = np.bincount(s, minlength=n_nodes).astype(np.int32)
+    row_ptr = np.zeros(n_nodes + 1, dtype=np.int32)
+    np.cumsum(degrees, out=row_ptr[1:])
+    col_idx = d.astype(np.int32)
+
+    max_deg = int(degrees.max()) if e else 0
+    width = min(max(_round_up(max(max_deg, 1), 8), 8), ell_cap)
+
+    # ELL fill: first `width` neighbours of each row; remainder -> tail.
+    ell_idx = np.full((n_nodes, width), n_nodes, dtype=np.int32)
+    within = np.arange(e, dtype=np.int64) - row_ptr[s].astype(np.int64)
+    in_ell = within < width
+    ell_idx[s[in_ell], within[in_ell]] = d[in_ell]
+    t_src = s[~in_ell].astype(np.int32)
+    t_dst = d[~in_ell].astype(np.int32)
+    t = len(t_src)
+    t_pad = max(_round_up(max(t, 1), 8), 8)
+    tail_src = np.full(t_pad, n_nodes, dtype=np.int32)
+    tail_dst = np.full(t_pad, n_nodes, dtype=np.int32)
+    tail_src[:t] = t_src
+    tail_dst[:t] = t_dst
+
+    arrays = GraphArrays(
+        n_nodes=n_nodes,
+        n_edges=e,
+        ell_width=width,
+        row_ptr=row_ptr,
+        col_idx=col_idx,
+        degrees=degrees,
+        ell_idx=ell_idx,
+        tail_src=tail_src,
+        tail_dst=tail_dst,
+        priority=_splitmix32(np.arange(n_nodes, dtype=np.int64)),
+    )
+    return Graph(name=name, n_nodes=n_nodes, n_edges=e // 2, arrays=arrays)
+
+
+def degree_stats(g: Graph) -> dict:
+    deg = np.asarray(g.arrays.degrees)
+    return {
+        "name": g.name,
+        "nodes": g.n_nodes,
+        "edges": g.n_edges,
+        "d_min": int(deg.min()),
+        "d_median": int(np.median(deg)),
+        "d_max": int(deg.max()),
+        "d_mean": float(deg.mean()),
+        "ell_width": g.ell_width,
+        "tail_entries": int((np.asarray(g.arrays.tail_src) != g.n_nodes).sum()),
+    }
+
+
+def validate_coloring(g: Graph, colors: np.ndarray) -> dict:
+    """Check the "no conflicts" property + report chromatic number."""
+    colors = np.asarray(colors)[: g.n_nodes]
+    s = np.repeat(np.arange(g.n_nodes), np.asarray(g.arrays.degrees))
+    d = np.asarray(g.arrays.col_idx)
+    conflicts = int(np.sum((colors[s] == colors[d]) & (colors[s] >= 0)))
+    uncolored = int(np.sum(colors < 0))
+    n_colors = int(colors.max()) + 1 if colors.size and colors.max() >= 0 else 0
+    return {"conflicts": conflicts // 2, "uncolored": uncolored, "n_colors": n_colors}

@@ -1,0 +1,63 @@
+"""Node partitioning for the distributed coloring engine.
+
+Strategy: block partition of (optionally degree-shuffled) node ids across the
+flattened data axes of the mesh. Each shard owns a contiguous node block and
+the ELL/CSR rows for it; the only cross-shard value at runtime is the color
+vector (all-gathered once per iteration — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import Graph, GraphArrays, build_graph
+
+
+def balance_permutation(g: Graph, n_shards: int, seed: int = 0) -> np.ndarray:
+    """Return a node permutation that balances total degree across blocks.
+
+    Greedy LPT over degree: sort by degree desc, deal round-robin snake-wise
+    into shards, then concatenate. Keeps hub nodes spread across shards
+    (straggler mitigation for the coloring engine: no shard owns all hubs).
+    """
+    deg = np.asarray(g.arrays.degrees)
+    order = np.argsort(-deg, kind="stable")
+    shards: list[list[int]] = [[] for _ in range(n_shards)]
+    loads = np.zeros(n_shards, dtype=np.int64)
+    # vectorised approximate LPT: snake deal in chunks of n_shards
+    n = g.n_nodes
+    pad = (-n) % n_shards
+    padded = np.concatenate([order, np.full(pad, -1, dtype=order.dtype)])
+    rows = padded.reshape(-1, n_shards)
+    rows[1::2] = rows[1::2, ::-1]  # snake to balance within-chunk skew
+    for s in range(n_shards):
+        col = rows[:, s]
+        col = col[col >= 0]
+        shards[s] = col.tolist()
+        loads[s] = deg[col].sum()
+    perm = np.concatenate([np.array(s_, dtype=np.int64) for s_ in shards])
+    return perm
+
+
+def repartition(g: Graph, n_shards: int, *, balance: bool = True,
+                seed: int = 0) -> tuple[Graph, np.ndarray]:
+    """Relabel nodes so that shard s owns the contiguous block
+    [s*B, (s+1)*B). Returns (new graph, old->new label map)."""
+    if balance:
+        perm = balance_permutation(g, n_shards, seed)
+    else:
+        perm = np.arange(g.n_nodes, dtype=np.int64)
+    new_of_old = np.empty(g.n_nodes, dtype=np.int64)
+    new_of_old[perm] = np.arange(g.n_nodes)
+    deg = np.asarray(g.arrays.degrees)
+    src = np.repeat(np.arange(g.n_nodes), deg)
+    dst = np.asarray(g.arrays.col_idx)
+    g2 = build_graph(new_of_old[src], new_of_old[dst], g.n_nodes,
+                     name=g.name + f"@p{n_shards}",
+                     ell_cap=g.ell_width, symmetrize=False)
+    return g2, new_of_old
+
+
+def shard_bounds(n_nodes: int, n_shards: int) -> np.ndarray:
+    """Block boundaries (padded so every shard has an equal block)."""
+    block = -(-n_nodes // n_shards)
+    return np.arange(n_shards + 1) * block

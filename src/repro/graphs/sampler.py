@@ -1,0 +1,83 @@
+"""Uniform neighbour sampler (GraphSAGE-style layered fan-out).
+
+JAX-native: static fan-out shapes, gather from CSR by random in-degree
+offsets. Used by the graphsage-reddit ``minibatch_lg`` shape and by the
+hybrid engine's data-driven frontier expansion.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SampledBlocks(NamedTuple):
+    """Layered minibatch: seeds[B], hop k neighbours [B * prod(f<k), f_k]."""
+
+    seeds: jax.Array                # [B]
+    hops: tuple[jax.Array, ...]     # hop k: [B * prod(fanouts[:k]), fanouts[k]]
+    masks: tuple[jax.Array, ...]    # same shapes, bool (False = padded)
+
+
+def sample_one_hop(rng: jax.Array, row_ptr: jax.Array, col_idx: jax.Array,
+                   seeds: jax.Array, fanout: int) -> tuple[jax.Array, jax.Array]:
+    """Sample ``fanout`` neighbours (with replacement) per seed."""
+    deg = row_ptr[seeds + 1] - row_ptr[seeds]
+    offs = jax.random.randint(rng, (seeds.shape[0], fanout), 0,
+                              jnp.maximum(deg, 1)[:, None])
+    nbrs = col_idx[row_ptr[seeds][:, None] + offs]
+    mask = jnp.broadcast_to(deg[:, None] > 0, nbrs.shape)
+    return jnp.where(mask, nbrs, seeds[:, None]), mask
+
+
+def sample_blocks(rng: jax.Array, row_ptr: jax.Array, col_idx: jax.Array,
+                  seeds: jax.Array, fanouts: tuple[int, ...]) -> SampledBlocks:
+    hops, masks = [], []
+    frontier = seeds
+    for k, f in enumerate(fanouts):
+        rng, sub = jax.random.split(rng)
+        nbrs, mask = sample_one_hop(sub, row_ptr, col_idx, frontier, f)
+        hops.append(nbrs)
+        masks.append(mask)
+        frontier = nbrs.reshape(-1)
+    return SampledBlocks(seeds=seeds, hops=tuple(hops), masks=tuple(masks))
+
+
+def blocks_to_graphbatch(blocks: SampledBlocks, feat_table: jax.Array,
+                         coord_table: jax.Array | None,
+                         label_table: jax.Array | None):
+    """Flatten layered fan-out blocks into a local edge-list GraphBatch so
+    any edge-list GNN (SchNet/EGNN/EquiformerV2) can run on a sampled
+    minibatch. Local node k is the k-th entry of [seeds, hop1.flat,
+    hop2.flat, ...]; edges point child -> parent (message direction)."""
+    import jax.numpy as jnp
+    from repro.models.gnn.common import GraphBatch
+
+    levels = [blocks.seeds] + [h.reshape(-1) for h in blocks.hops]
+    sizes = [lv.shape[0] for lv in levels]
+    offs = [0]
+    for s in sizes[:-1]:
+        offs.append(offs[-1] + s)
+    n_local = sum(sizes)
+    nodes_global = jnp.concatenate(levels)
+
+    srcs, dsts = [], []
+    for k, hop in enumerate(blocks.hops):
+        n_parent, fan = hop.shape
+        parent_local = offs[k] + jnp.arange(n_parent, dtype=jnp.int32)
+        child_local = offs[k + 1] + jnp.arange(n_parent * fan,
+                                               dtype=jnp.int32)
+        mask = blocks.masks[k].reshape(-1)
+        srcs.append(jnp.where(mask, child_local, n_local))
+        dsts.append(jnp.where(mask, jnp.repeat(parent_local, fan), n_local))
+    return GraphBatch(
+        node_feat=feat_table[nodes_global],
+        edge_src=jnp.concatenate(srcs),
+        edge_dst=jnp.concatenate(dsts),
+        coords=None if coord_table is None else coord_table[nodes_global],
+        node_label=(jnp.zeros((n_local,), jnp.int32) if label_table is None
+                    else label_table[nodes_global]),
+        graph_id=None,
+        n_graphs=1,
+    )

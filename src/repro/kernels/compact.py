@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: stream compaction (the worklist "push").
+
+Turns a dense active mask into the compacted index array — the TPU-native
+replacement for IrGL's warp-aggregated atomic worklist pushes
+(DESIGN.md §2). The TPU grid executes sequentially, so a running global
+offset lives in SMEM scratch and is carried across grid steps; each step
+
+  1. computes the tile's exclusive prefix sum of the mask,
+  2. materialises the tile's compacted local indices (one-hot position
+     match — O(TILE^2) VPU compares, still HBM-bound overall),
+  3. stores them with a *dynamic-offset, static-size* slice at the global
+     offset (dynamic-slice stores are supported; scatter stores are not),
+  4. bumps the carry.
+
+Each tile's TILE-wide store overwrites the junk tail of the previous
+tile's store, so after the final step positions [0, count) are exactly the
+compacted indices; the wrapper masks positions >= count with the sentinel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _compact_kernel(mask_ref, out_ref, count_ref, carry_ref, *, tile: int,
+                    n_grid: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[0] = 0
+
+    m = mask_ref[...].astype(jnp.int32)            # (1, TILE)
+    csum = jnp.cumsum(m, axis=1)
+    excl = csum - m                                # exclusive prefix
+    tile_count = csum[0, tile - 1]
+
+    # compacted local indices: pos p holds j s.t. mask[j] & excl[j] == p
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)   # j
+    iota_p = jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 0)   # p
+    hit = (excl[0][None, :] == iota_p) & (m[0][None, :] != 0)       # (p, j)
+    local = jnp.sum(jnp.where(hit, iota_j, 0), axis=1)              # (p,)
+    base = carry_ref[0]
+    global_idx = local + step * tile               # absolute node ids
+
+    out_ref[pl.ds(base, tile)] = global_idx
+    carry_ref[0] = base + tile_count
+
+    @pl.when(step == n_grid - 1)
+    def _fin():
+        count_ref[0] = carry_ref[0]
+
+
+def compact_pallas(mask: jax.Array, *, tile: int = 256,
+                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """mask bool[N] -> (items int32[N] padded with N, count int32[])."""
+    n = mask.shape[0]
+    pad = (-n) % tile
+    m = jnp.pad(mask.astype(jnp.int32), (0, pad))
+    npad = n + pad
+    grid = (npad // tile,)
+    items, count = pl.pallas_call(
+        functools.partial(_compact_kernel, tile=tile, n_grid=grid[0]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=[
+            # whole items array stays VMEM-resident across the sequential
+            # grid (dynamic-offset stores need VMEM; bounds N <= ~4M int32)
+            pl.BlockSpec((npad,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(m[None, :])
+    cnt = count[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    items = jnp.where(iota < cnt, items[:n], n)    # sentinel the junk tail
+    # padded-region indices can never appear: mask was zero there
+    return items, cnt

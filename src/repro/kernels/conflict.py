@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: conflict detection with one-endpoint resolution.
+
+Row u "loses" (gets uncolored, stays in the worklist) iff some neighbour v
+has the same color and a higher (priority, id) pair — the paper's
+"exactly one node from the conflicting edge is removed from the worklist".
+
+Pure elementwise-compare + reduce over the ELL width: a single
+(TILE_R, K) tile per input, one pass, no reduction loop needed since K is
+a tile dimension. Memory-bound; the kernel exists to fuse the five
+comparisons into one VMEM-resident pass instead of five HBM sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conflict_kernel(nc_ref, npr_ref, nid_ref, cu_ref, pu_ref, uid_ref,
+                     out_ref):
+    nc = nc_ref[...]          # (TR, K) neighbour colors
+    npr = npr_ref[...]        # (TR, K) neighbour priorities (pad = -1)
+    nid = nid_ref[...]        # (TR, K) neighbour ids
+    cu = cu_ref[...]          # (TR, 1) own color
+    pu = pu_ref[...]          # (TR, 1) own priority
+    uid = uid_ref[...]        # (TR, 1) own id
+    same = (nc == cu) & (cu >= 0)
+    higher = (npr > pu) | ((npr == pu) & (nid > uid))
+    out_ref[...] = jnp.any(same & higher, axis=1).astype(jnp.int32)[:, None]
+
+
+def conflict_pallas(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
+                    cu: jax.Array, pu: jax.Array, ids: jax.Array,
+                    *, tile_rows: int = 32, interpret: bool = False
+                    ) -> jax.Array:
+    r, k = nc.shape
+    pad = (-r) % tile_rows
+    if pad:
+        nc = jnp.pad(nc, ((0, pad), (0, 0)), constant_values=-2)
+        npr = jnp.pad(npr, ((0, pad), (0, 0)), constant_values=-1)
+        nbr_ids = jnp.pad(nbr_ids, ((0, pad), (0, 0)))
+        cu = jnp.pad(cu, (0, pad), constant_values=-2)
+        pu = jnp.pad(pu, (0, pad), constant_values=-1)
+        ids = jnp.pad(ids, (0, pad))
+    rp = r + pad
+    col = lambda x: x[:, None].astype(jnp.int32)
+    out = pl.pallas_call(
+        _conflict_kernel,
+        grid=(rp // tile_rows,),
+        in_specs=[
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+        interpret=interpret,
+    )(nc, npr, nbr_ids, col(cu), col(pu), col(ids))
+    return out[:r, 0] != 0

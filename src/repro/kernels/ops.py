@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they execute
+in interpret mode so the engine's ``impl="pallas"`` path stays testable
+end-to-end. CPU *benchmarks* use the jnp reference path (``impl="jnp"``)
+— interpret mode measures Python, not the kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compact import compact_pallas
+from repro.kernels.conflict import conflict_pallas
+from repro.kernels.frontier import frontier_probe_pallas
+from repro.kernels.mex_window import mex_window_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("window",))
+def mex_window(nc: jax.Array, base: jax.Array, extra_forb: jax.Array,
+               window: int) -> tuple[jax.Array, jax.Array]:
+    first = mex_window_pallas(nc, base, extra_forb, window,
+                              interpret=_interpret())
+    return first, first >= 0
+
+
+@jax.jit
+def conflict(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
+             cu: jax.Array, pu: jax.Array, ids: jax.Array) -> jax.Array:
+    return conflict_pallas(nc, npr, nbr_ids, cu, pu, ids,
+                           interpret=_interpret())
+
+
+@jax.jit
+def compact(mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return compact_pallas(mask, interpret=_interpret())
+
+
+@jax.jit
+def frontier_probe(nbr_in_frontier: jax.Array,
+                   unvisited: jax.Array) -> jax.Array:
+    return frontier_probe_pallas(nbr_in_frontier, unvisited,
+                                 interpret=_interpret())

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mex_window_ref(nc: jax.Array, base: jax.Array, extra_forb: jax.Array,
+                   window: int) -> jax.Array:
+    """First free window index per row; -1 if the whole window is forbidden."""
+    rel = nc - base[:, None]
+    ok = (nc >= 0) & (rel >= 0) & (rel < window)
+    iota = jnp.arange(window, dtype=jnp.int32)
+    forb = (ok[:, :, None] & (rel[:, :, None] == iota)).any(axis=1)
+    forb = forb | extra_forb
+    free = ~forb
+    has = free.any(axis=1)
+    first = jnp.argmax(free, axis=1).astype(jnp.int32)
+    return jnp.where(has, first, -1)
+
+
+def conflict_ref(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
+                 cu: jax.Array, pu: jax.Array, ids: jax.Array) -> jax.Array:
+    same = (nc == cu[:, None]) & (cu >= 0)[:, None]
+    higher = (npr > pu[:, None]) | ((npr == pu[:, None]) &
+                                    (nbr_ids > ids[:, None]))
+    return (same & higher).any(axis=1)
+
+
+def compact_ref(mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    n = mask.shape[0]
+    (idx,) = jnp.nonzero(mask, size=n, fill_value=n)
+    return idx.astype(jnp.int32), mask.sum(dtype=jnp.int32)
+
+
+def frontier_probe_ref(nbr_in_frontier: jax.Array,
+                       unvisited: jax.Array) -> jax.Array:
+    return nbr_in_frontier.any(axis=1) & unvisited

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run.
+
+For every (architecture x input-shape x mesh) cell:
+  jit(step, in_shardings).lower(*ShapeDtypeStructs).compile()
+then record memory_analysis(), cost_analysis() and the per-device
+collective-transfer volume parsed from the compiled (SPMD-partitioned)
+HLO. Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json —
+the roofline table (EXPERIMENTS.md §Roofline) is derived from these.
+
+Usage:
+  python -m repro.launch.dryrun --all                  # 40 cells x 2 meshes
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --paper                # paper-ipgc extras
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"=\s+(?:\()?([a-z]+\d*)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device communicated bytes per collective kind.
+
+    Counts the *operand* volume: output bytes for all-gather / all-reduce /
+    all-to-all / collective-permute; output x group-size for
+    reduce-scatter (whose output is the already-scattered shard).
+    """
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        kind = None
+        for k in _COLLECTIVES:
+            if f" {k}(" in stripped or f"{k}-start(" in stripped:
+                kind = k
+                break
+        if kind is None:
+            continue
+        m = _SHAPE_RE.search(stripped)
+        if not m:
+            continue
+        nbytes = _shape_bytes(m.group(1), m.group(2))
+        if kind == "reduce-scatter":
+            g = _GROUP_RE.search(stripped)
+            if g:
+                nbytes *= len(g.group(1).split(","))
+            else:
+                g2 = _GROUP_RE2.search(stripped)
+                if g2:
+                    nbytes *= int(g2.group(2))
+        out[kind]["bytes"] += nbytes
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+def _arg_shard_bytes(args, shardings, mesh) -> int:
+    """Analytic per-device bytes of the inputs (fallback when the backend
+    has no memory_analysis)."""
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(args), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))):
+        size = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        if isinstance(sh, jax.sharding.NamedSharding):
+            denom = 1
+            for part in sh.spec:
+                if part is None:
+                    continue
+                names = part if isinstance(part, tuple) else (part,)
+                for nm in names:
+                    denom *= mesh.shape[nm]
+            size //= max(denom, 1)
+        total += size
+    return total
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             outdir: str, variant: str = "base") -> dict:
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_case
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant,
+           "n_devices": 512 if multi_pod else 256, "ok": False}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        case = build_case(arch_id, shape_name, mesh, multi_pod=multi_pod,
+                          variant=variant)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                             donate_argnums=case.donate or ())
+            lowered = jitted.lower(*case.args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        rec["lower_s"] = round(t_lower - t0, 2)
+        rec["compile_s"] = round(t_compile - t_lower, 2)
+        rec["meta"] = case.meta
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as exc:  # CPU backend may not implement it
+            rec["memory_analysis"] = {"error": str(exc)[:200]}
+        rec["arg_shard_bytes"] = _arg_shard_bytes(case.args,
+                                                  case.in_shardings, mesh)
+
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                    if isinstance(v, (int, float))
+                                    and (k in ("flops", "transcendentals")
+                                         or "bytes" in k)}
+        except Exception as exc:
+            rec["cost_analysis"] = {"error": str(exc)[:200]}
+
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        # loop-corrected cost model (XLA cost_analysis counts while bodies
+        # once; hlocost multiplies by known_trip_count — see hlocost.py)
+        from repro.launch import hlocost
+        try:
+            rec["hlocost"] = hlocost.analyze(hlo)
+        except Exception as exc:
+            rec["hlocost"] = {"error": str(exc)[:300]}
+        rec["ok"] = True
+    except Exception:
+        rec["error"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+
+    os.makedirs(outdir, exist_ok=True)
+    suffix = "" if variant == "base" else f"__{variant}"
+    path = os.path.join(outdir,
+                        f"{arch_id}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK " if rec["ok"] else "FAIL"
+    print(f"[{status}] {arch_id:22s} {shape_name:14s} {mesh_name:10s} "
+          f"{variant:8s} compile={rec.get('compile_s', '-')}s "
+          f"total={rec['total_s']}s", flush=True)
+    return rec
+
+
+def main() -> None:
+    from repro.configs import ARCH_IDS, get_arch
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--variant", default="base",
+                    help="base | opt | opt_int8 | opt_int8_half ...")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells: list[tuple[str, str]] = []
+    if args.paper:
+        arch = get_arch("paper-ipgc")
+        cells += [("paper-ipgc", s) for s in arch.shapes]
+    elif args.all:
+        for a in ARCH_IDS:
+            cells += [(a, s) for s in get_arch(a).shapes]
+    else:
+        archs = [args.arch] if args.arch else ARCH_IDS
+        for a in archs:
+            shapes = [args.shape] if args.shape else list(get_arch(a).shapes)
+            cells += [(a, s) for s in shapes]
+
+    n_fail = 0
+    for a, s in cells:
+        for mp in meshes:
+            rec = run_cell(a, s, mp, args.outdir, variant=args.variant)
+            n_fail += 0 if rec["ok"] else 1
+    print(f"\ndone: {len(cells) * len(meshes) - n_fail} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

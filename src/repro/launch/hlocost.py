@@ -1,0 +1,285 @@
+"""Loop-aware cost model over compiled (SPMD-partitioned) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once* —
+a 96-layer ``lax.scan`` transformer is undercounted ~96x. This module
+re-derives per-device costs from the HLO text with loop multipliers:
+
+  * computations are parsed into blocks; ``while`` ops carry
+    ``backend_config={"known_trip_count":{"n":...}}`` (scan always does),
+    so body/condition computations get multiplier x n along the call chain;
+  * MXU FLOPs: every ``dot`` contributes 2 * prod(out_dims) * prod(
+    contracted lhs dims) * multiplier;
+  * HBM bytes: every materialised instruction boundary contributes
+    (operand bytes + output bytes) * multiplier. Computations called *by
+    fusion ops* are skipped for memory (their traffic happens in
+    registers/VMEM); the fusion op itself is the HBM boundary — this is
+    exactly the TPU execution model;
+  * collective bytes: output-shape bytes * multiplier per collective
+    (x group size for reduce-scatter, whose output is the post-scatter
+    shard).
+
+The result feeds the roofline terms (launch/roofline.py). Validated in
+tests/test_hlocost.py against hand-counted scan matmuls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# '%name = f32[1,2]{1,0} op(...)' (ROOT optional; tuple results handled)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?)([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s+->")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s+([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_SKIP_MEMORY_OPS = (
+    "parameter(", "constant(", "tuple(", "get-tuple-element(", "bitcast(",
+    "while(", "conditional(", "after-all(", "partition-id(", "iota(",
+)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    dtype: str
+    dims: tuple
+    line: str
+
+    @property
+    def bytes(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    params: dict       # name -> Instr-like shapes
+
+    def param_effective_bytes(self) -> dict:
+        """Per-parameter *touched* bytes: a parameter consumed only by
+        slicing/gather ops reads just the slice, not the whole buffer
+        (scan-stacked weights: dynamic-slice reads one layer per trip)."""
+        out = {}
+        for pname, p in self.params.items():
+            consumers = [i for i in self.instrs
+                         if re.search(rf"%{re.escape(pname)}\b",
+                                      i.line.split("=", 1)[-1])]
+            if consumers and all(
+                    any(f" {op}(" in c.line for op in
+                        ("dynamic-slice", "gather", "slice"))
+                    for c in consumers):
+                out[pname] = max(c.bytes for c in consumers)
+            else:
+                out[pname] = p.bytes
+        return out
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                for pm in _PARAM_RE.finditer(m.group(2)):
+                    dims = tuple(int(x) for x in pm.group(3).split(",") if x)
+                    cur.params[pm.group(1)] = Instr(pm.group(1), pm.group(2),
+                                                    dims, "")
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m and m.group(2) != "(":          # skip tuple-typed results
+            dims = tuple(int(x) for x in m.group(4).split(",") if x)
+            cur.instrs.append(Instr(m.group(1), m.group(3), dims,
+                                    line.strip()))
+        elif m:                               # tuple result (while etc.)
+            cur.instrs.append(Instr(m.group(1), "opaque", (), line.strip()))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _shape_map(comps: dict) -> dict:
+    shapes: dict[str, Instr] = {}
+    for c in comps.values():
+        for p in c.params.values():
+            shapes.setdefault(p.name, p)
+        for i in c.instrs:
+            shapes.setdefault(i.name, i)
+    return shapes
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_module(text)
+    shapes = _shape_map(comps)
+
+    # --- multipliers along the call graph -------------------------------
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    fused_ctx: set[str] = set()
+
+    def visit(name: str, m: float, fused: bool):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        if fused:
+            fused_ctx.add(name)
+        comp = comps[name]
+        for ins in comp.instrs:
+            line = ins.line
+            if " while(" in line or line.startswith("while("):
+                trip_m = _TRIP_RE.search(line)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                b = _BODY_RE.search(line)
+                c = _COND_RE.search(line)
+                if b:
+                    visit(b.group(1), m * trip, fused)
+                if c:
+                    visit(c.group(1), m * (trip + 1), fused)
+            elif " fusion(" in line or " reduce(" in line \
+                    or " reduce-window(" in line or " all-reduce(" in line \
+                    or " scatter(" in line or " sort(" in line \
+                    or " map(" in line or " select-and-scatter(" in line:
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    visit(cm.group(1), m, True)
+            elif " call(" in line:
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    visit(cm.group(1), m, fused)
+            elif " conditional(" in line:
+                bm = _BRANCH_RE.search(line)
+                if bm:
+                    for b in _OPERAND_RE.findall(bm.group(1)):
+                        visit(b, m, fused)
+
+    visit(entry, 1.0, False)
+
+    # --- accumulate costs ------------------------------------------------
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = {k: {"bytes": 0.0, "count": 0.0} for k in _COLLECTIVES}
+    _eff_cache: dict[str, tuple] = {}
+
+    def _callee_effective(cname: str):
+        if cname not in _eff_cache:
+            callee = comps[cname]
+            eff_map = callee.param_effective_bytes()
+            _eff_cache[cname] = ([eff_map.get(p) for p in callee.params])
+        return _eff_cache[cname]
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        local = dict(comp.params)
+        for ins in comp.instrs:
+            local[ins.name] = ins
+        in_fusion = cname in fused_ctx
+        for ins in comp.instrs:
+            line = ins.line
+            # FLOPs: dots (MXU)
+            if " dot(" in line:
+                ops = _OPERAND_RE.findall(line.split("dot(", 1)[1])
+                lhs = local.get(ops[0]) or shapes.get(ops[0])
+                cd = _LHS_CDIMS_RE.search(line)
+                contracted = 1
+                if lhs is not None and cd:
+                    for di in cd.group(1).split(","):
+                        if di:
+                            contracted *= lhs.dims[int(di)]
+                out_elems = 1
+                for d in ins.dims:
+                    out_elems *= d
+                flops += m * 2.0 * out_elems * contracted
+            # collectives
+            for k in _COLLECTIVES:
+                if f" {k}(" in line or f" {k}-start(" in line:
+                    nbytes = ins.bytes
+                    if k == "reduce-scatter":
+                        g = _GROUPS_RE.search(line)
+                        if g:
+                            nbytes *= int(g.group(2))
+                        else:
+                            g2 = _GROUPS_BRACES_RE.search(line)
+                            if g2:
+                                nbytes *= len(g2.group(1).split(","))
+                    coll[k]["bytes"] += m * nbytes
+                    coll[k]["count"] += m
+                    break
+            # HBM traffic at instruction boundaries (skip fused internals)
+            if in_fusion:
+                continue
+            if any(s in line for s in _SKIP_MEMORY_OPS):
+                continue
+            rhs = line.split("=", 1)[1] if "=" in line else line
+            paren = rhs.find("(")
+            arglist = rhs[paren + 1:rhs.find(")", paren)] if paren >= 0 else ""
+            operands = _OPERAND_RE.findall(arglist)
+            # slicing ops touch only the slice, not the source buffer
+            if any(f" {op}(" in line for op in
+                   ("dynamic-slice", "gather", "slice")):
+                hbm_bytes += m * 2 * ins.bytes
+                continue
+            if " dynamic-update-slice(" in line and len(operands) >= 2:
+                upd = local.get(operands[1]) or shapes.get(operands[1])
+                hbm_bytes += m * 2 * (upd.bytes if upd else ins.bytes)
+                continue
+            if " scatter(" in line and len(operands) >= 3:
+                upd = local.get(operands[2]) or shapes.get(operands[2])
+                hbm_bytes += m * 2 * (upd.bytes if upd else ins.bytes)
+                continue
+            # fusion call sites: parameters consumed only by slicing inside
+            # the fused computation count at their sliced size
+            eff = None
+            if " fusion(" in line:
+                cm = _CALLS_RE.search(line)
+                if cm and cm.group(1) in comps:
+                    eff = _callee_effective(cm.group(1))
+            opnds = 0
+            for idx, op in enumerate(operands):
+                if eff is not None and idx < len(eff) and eff[idx] is not None:
+                    opnds += eff[idx]
+                    continue
+                sh = local.get(op) or shapes.get(op)
+                if sh is not None:
+                    opnds += sh.bytes
+            hbm_bytes += m * (opnds + ins.bytes)
+
+    coll_total = sum(v["bytes"] for v in coll.values())
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collectives": {k: v for k, v in coll.items()},
+        "collective_bytes": coll_total,
+        "n_computations": len(comps),
+    }

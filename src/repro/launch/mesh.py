@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS *before* first jax
+init; smoke tests see the real single CPU device).
+
+Target hardware: TPU v5e pods, 16x16 = 256 chips per pod. Single-pod mesh
+is (data=16, model=16); the multi-pod mesh adds a leading pod axis
+(2, 16, 16) = 512 chips. TP traffic stays inside a pod (the ``model`` axis
+never crosses the pod axis); DP/FSDP traffic spans pods over DCI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~4 links usable)

@@ -1,0 +1,133 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh (256 chips of TPU v5e):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s       [s]
+  memory term     = HLO_bytes_per_device / HBM_bw            [s]
+  collective term = collective_bytes_per_device / link_bw    [s]
+
+(The compiled module is the SPMD-partitioned per-device program, so its
+cost_analysis and parsed collective volumes are already per-device —
+dividing global quantities by the chip count per the assignment formula
+gives the same numbers.)
+
+Derived:
+  bound            = argmax of the three terms
+  step time lower  = max(terms)
+  MODEL_FLOPS      = 6*N*D (train) / 2*N*D (serve), N = active params
+  useful ratio     = MODEL_FLOPS / (HLO_FLOPs_per_device * chips)
+  roofline frac    = (MODEL_FLOPS / (chips*peak)) / max(terms)
+                     -> the reported score: how much of the bound-implied
+                        step time does useful model math fill.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+OUTDIR = "experiments/dryrun"
+
+
+def load_records(outdir: str = OUTDIR, mesh: str = "pod16x16") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(outdir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return {"arch": rec["arch"], "shape": rec["shape"], "ok": False}
+    hc = rec.get("hlocost", {})
+    ca = rec.get("cost_analysis", {})
+    if "flops" in hc:      # loop-corrected model (preferred — see hlocost.py)
+        flops_dev = hc["flops"]
+        bytes_dev = hc["hbm_bytes"]
+        coll_dev = hc["collective_bytes"]
+    else:                  # raw XLA numbers (while bodies counted once)
+        flops_dev = ca.get("flops", 0.0)
+        bytes_dev = ca.get("bytes accessed", 0.0)
+        coll_dev = rec.get("collectives", {}).get("total_bytes", 0)
+    chips = rec.get("n_devices", 256)
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    t_bound = max(t_comp, t_mem, t_coll, 1e-12)
+    bound = {t_comp: "compute", t_mem: "memory", t_coll: "collective"}[
+        max(t_comp, t_mem, t_coll)]
+    model_flops = rec.get("meta", {}).get("model_flops", 0)
+    # dot-free programs (the coloring engine is VPU/scatter work) have no
+    # MXU flops — the 6ND 'useful' convention does not apply
+    useful = (model_flops / (flops_dev * chips)
+              if flops_dev > 0 else float("nan"))
+    frac = (model_flops / (chips * PEAK_FLOPS_BF16)) / t_bound
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "ok": True,
+        "kind": rec.get("meta", {}).get("kind", "?"), "chips": chips,
+        "t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll,
+        "bound": bound, "t_bound": t_bound, "model_flops": model_flops,
+        "useful_ratio": useful, "roofline_frac": frac,
+        "flops_dev": flops_dev, "bytes_dev": bytes_dev, "coll_dev": coll_dev,
+    }
+
+
+def rows(outdir: str = OUTDIR, mesh: str = "pod16x16") -> list[dict]:
+    return [r for r in (roofline_row(rec) for rec in load_records(
+        outdir, mesh)) if r is not None]
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def markdown_table(outdir: str = OUTDIR, mesh: str = "pod16x16") -> str:
+    lines = [
+        f"| arch | shape | kind | compute | memory | collective | bound | "
+        f"useful HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(outdir, mesh):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |")
+            continue
+        import math
+        useful = ("—" if math.isnan(r["useful_ratio"])
+                  else f"{r['useful_ratio']:.2f}")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{_fmt_s(r['t_compute'])} | {_fmt_s(r['t_memory'])} | "
+            f"{_fmt_s(r['t_collective'])} | **{r['bound']}** | "
+            f"{useful} | {r['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def summary_lines(outdir: str = OUTDIR) -> list[str]:
+    out = []
+    for r in rows(outdir):
+        if r.get("ok"):
+            out.append(
+                f"roofline/{r['arch']}/{r['shape']},"
+                f"{r['t_bound'] * 1e6:.0f},"
+                f"bound={r['bound']} frac={r['roofline_frac']:.3f}")
+    if not out:
+        raise FileNotFoundError("no dry-run artifacts")
+    return out
+
+
+def main() -> None:
+    for mesh in ("pod16x16",):
+        print(f"\n## Roofline — {mesh} (256 chips, v5e: 197 TF/s bf16, "
+              f"819 GB/s HBM, 50 GB/s ICI link)\n")
+        print(markdown_table(mesh=mesh))
+
+
+if __name__ == "__main__":
+    main()

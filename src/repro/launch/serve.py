@@ -1,0 +1,80 @@
+"""Serving driver: batched prefill + decode with a KV cache.
+
+Demonstrates the serve path end-to-end on CPU with a smoke config:
+a batch of prompts is prefilled, then decoded token-by-token; reports
+prefill and per-token decode latency/throughput.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
+      --smoke --batch 8 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import transformer as tfm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="serve with an int8-quantized KV cache")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    cfg = arch.make_smoke() if args.smoke else arch.make_config()
+    key = jax.random.PRNGKey(0)
+    params, _ = tfm.init_params(cfg, key)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    max_len = args.prompt_len + args.gen
+
+    prefill = jax.jit(lambda p, t: tfm.prefill(p, t, cfg, max_len=max_len))
+    decode = jax.jit(lambda p, t, c: tfm.decode_step(p, t, c, cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts)
+    if args.kv_int8:
+        # re-quantize the prefilled cache (per-(pos, head) absmax scales)
+        from repro.models.attention import KVCache, quantize_kv
+        kq, ks = quantize_kv(cache.k)
+        vq, vs = quantize_kv(cache.v)
+        cache = KVCache(k=kq, v=vq, length=cache.length,
+                        k_scale=ks, v_scale=vs)
+        print("serving with int8 KV cache (2x less decode HBM traffic)")
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
+          f"{t_prefill * 1e3:.1f}ms "
+          f"({args.batch * args.prompt_len / t_prefill:,.0f} tok/s)")
+
+    toks = jnp.argmax(logits, -1)[:, None]
+    out = [toks]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, toks, cache)
+        toks = jax.random.categorical(sub, logits / args.temperature)[:, None]
+        out.append(toks)
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+    per_tok = dt / max(args.gen - 1, 1)
+    print(f"decode: {args.gen - 1} steps x batch {args.batch} in {dt:.2f}s "
+          f"({per_tok * 1e3:.1f}ms/step, "
+          f"{args.batch * (args.gen - 1) / dt:,.0f} tok/s)")
+    gen = jnp.concatenate(out, axis=1)
+    print("sample token ids:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Attention: RoPE + GQA with chunked (flash-style online-softmax) compute.
+
+Shapes use named conventions:  B batch, S sequence, H q-heads, Hk kv-heads,
+G = H/Hk group size, D head dim.
+
+Training/prefill use ``flash_attention`` — an O(S) -memory online-softmax
+scan over KV chunks (the TPU-idiomatic analogue of FlashAttention: chunk
+sizes are picked so each (cq x ck) score tile lives in VMEM and feeds the
+MXU with 128-aligned contractions).
+
+Decode uses one-query attention over a (possibly sequence-sharded) KV
+cache; the softmax reductions over the sharded axis lower to cheap
+all-reduces of (B, H) scalars.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float
+                ) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin (..., D/2) in fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, N, D); cos/sin (S, D/2) or (B, S, D/2)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if cos.ndim == 2:                     # (S, half) — shared positions
+        c, s = cos[None, :, None, :], sin[None, :, None, :]
+    else:                                 # (B, S, half) — per-batch positions
+        c, s = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def _chunk_attn_block(q, k, v, carry, q_pos, k_pos, causal, scale):
+    """One (q-chunk, k-chunk) online-softmax update.
+
+    q (B, cq, Hk, G, D); k/v (B, ck, Hk, D); carry = (m, l, acc).
+    """
+    m, l, acc = carry
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]          # (cq, ck)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    m_new = jnp.maximum(m, s.max(axis=-1))               # (B,Hk,G,cq)
+    # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> use safe sub
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+    corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+    l_new = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * corr[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_chunk: int = 512,
+                    k_chunk: int = 1024, scale: float | None = None,
+                    remat_chunks: bool = True) -> jax.Array:
+    """q (B,Sq,H,D), k/v (B,Sk,Hk,D) -> (B,Sq,H,D). O(chunk^2) memory.
+
+    ``remat_chunks`` puts jax.checkpoint on the per-chunk body and the
+    per-q-block function, so *backward* recomputes each (cq x ck) score
+    tile instead of saving all nq*nk tiles — without it the autodiff
+    residuals are O(B*H*Sq*Sk) bytes (225 GB/device for gemma-7b
+    train_4k: found by the dry-run memory_analysis; EXPERIMENTS.md §Perf
+    B0). This is the FlashAttention recompute scheme expressed with
+    scan + remat.
+    """
+    b, sq, h, d = q.shape
+    _, sk, hk, _ = k.shape
+    g = h // hk
+    scale = scale if scale is not None else d ** -0.5
+    q = q.reshape(b, sq, hk, g, d)
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    if sq % q_chunk:
+        q_chunk = sq
+    if sk % k_chunk:
+        k_chunk = sk
+    nq, nk = sq // q_chunk, sk // k_chunk
+
+    k_r = k.reshape(b, nk, k_chunk, hk, d)
+    v_r = v.reshape(b, nk, k_chunk, hk, d)
+
+    def q_block(qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            ki, kc, vc = inputs
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            return _chunk_attn_block(qc, kc, vc, carry, q_pos, k_pos,
+                                     causal, scale), None
+
+        if remat_chunks:
+            kv_step = jax.checkpoint(kv_step, prevent_cse=False)
+        init = (jnp.full((b, hk, g, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((b, hk, g, q_chunk), jnp.float32),
+                jnp.zeros((b, hk, g, q_chunk, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (jnp.arange(nk), jnp.moveaxis(k_r, 1, 0), jnp.moveaxis(v_r, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,Hk,G,cq,D)
+        return jnp.moveaxis(out, 3, 1).reshape(b, q_chunk, h, d)
+
+    if remat_chunks:
+        q_block = jax.checkpoint(q_block, prevent_cse=False)
+    outs = jax.lax.map(q_block, jnp.arange(nq))          # (nq,B,cq,H,D)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, scale: float | None = None
+                     ) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q (B, 1, H, D); caches (B, S_max, Hk, D); cache_len (B,) valid lengths.
+    Works with a sequence-sharded cache: the max/sum reductions over S_max
+    become tiny cross-shard all-reduces under GSPMD.
+    """
+    b, _, h, d = q.shape
+    _, s_max, hk, _ = k_cache.shape
+    g = h // hk
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hk, g, d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s_max)
+    s = jnp.where(pos[None, None, None, :] < cache_len[:, None, None, None],
+                  s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    """Per-model KV cache: stacked over layers for scan.
+
+    Optionally int8-quantized (k/v int8 + per-(position, head) fp16
+    absmax scales) — halves decode HBM traffic, the decode bound
+    (EXPERIMENTS.md §Perf B3)."""
+
+    k: jax.Array                 # (L, B, S_max, Hk, D) bf16 or int8
+    v: jax.Array
+    length: jax.Array            # (B,) int32 — shared across layers
+    k_scale: jax.Array | None = None   # (L, B, S_max, Hk) when int8
+    v_scale: jax.Array | None = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @staticmethod
+    def init(n_layers: int, batch: int, s_max: int, n_kv: int, head_dim: int,
+             dtype=jnp.bfloat16) -> "KVCache":
+        shape = (n_layers, batch, s_max, n_kv, head_dim)
+        if dtype == jnp.int8:
+            sshape = (n_layers, batch, s_max, n_kv)
+            return KVCache(k=jnp.zeros(shape, jnp.int8),
+                           v=jnp.zeros(shape, jnp.int8),
+                           length=jnp.zeros((batch,), jnp.int32),
+                           k_scale=jnp.zeros(sshape, jnp.float16),
+                           v_scale=jnp.zeros(sshape, jnp.float16))
+        return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                       length=jnp.zeros((batch,), jnp.int32))
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., D) -> int8 values + per-(...) fp16 absmax scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / jnp.maximum(scale, 1e-8)[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def decode_attention_q8(q: jax.Array, k_q: jax.Array, k_scale: jax.Array,
+                        v_q: jax.Array, v_scale: jax.Array,
+                        cache_len: jax.Array, *, scale: float | None = None
+                        ) -> jax.Array:
+    """Single-token attention over an int8 KV cache — the cache is read
+    *as int8 by the dots themselves* (QK^T and PV run int8 x int8 -> int32
+    with fp32 rescale on the small score/output tensors), so HBM traffic
+    is half the bf16 path. The attention-weight quantisation costs ~1e-2
+    relative error (KIVI-class tradeoff; tests/test_models.py).
+
+    q (B,1,H,D); k_q/v_q (B,S,Hk,D) int8; scales (B,S,Hk) fp16.
+    """
+    b, _, h, d = q.shape
+    _, s_max, hk, _ = k_q.shape
+    g = h // hk
+    sc = scale if scale is not None else d ** -0.5
+    qq, qs = quantize_kv(q.reshape(b, hk, g, d))          # int8 query
+    s_int = jnp.einsum("bhgd,bshd->bhgs", qq, k_q,
+                       preferred_element_type=jnp.int32)
+    s = (s_int.astype(jnp.float32)
+         * qs.astype(jnp.float32)[..., None]
+         * jnp.moveaxis(k_scale.astype(jnp.float32), 1, 2)[:, :, None, :]
+         * sc)
+    pos = jnp.arange(s_max)
+    s = jnp.where(pos[None, None, None, :] < cache_len[:, None, None, None],
+                  s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # fold v's per-position scale into p, then quantise p rows to int8
+    pw = p * jnp.moveaxis(v_scale.astype(jnp.float32), 1, 2)[:, :, None, :]
+    pq, ps = quantize_kv(pw)
+    o_int = jnp.einsum("bhgs,bshd->bhgd", pq, v_q,
+                       preferred_element_type=jnp.int32)
+    o = o_int.astype(jnp.float32) * ps.astype(jnp.float32)[..., None]
+    return o.reshape(b, 1, h, d).astype(q.dtype)

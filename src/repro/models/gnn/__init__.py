@@ -1,0 +1,1 @@
+"""GNN model zoo: GraphSAGE, SchNet, EGNN, EquiformerV2 (eSCN)."""

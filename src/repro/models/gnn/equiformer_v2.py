@@ -1,0 +1,242 @@
+"""EquiformerV2 (Liao et al. 2023) — equivariant graph attention with
+eSCN-style SO(2) convolutions.
+
+Mechanics implemented faithfully:
+  * node features are real-SH irrep stacks  X in R^{N x S x C},
+    S = (l_max+1)^2, C sphere channels;
+  * per edge, source features are rotated into the edge-aligned frame
+    (``so3.rotation_to_z`` + Wigner-D from the Ivanic recursion), where the
+    SO(3) tensor-product convolution reduces to dense per-m linear maps
+    with |m| <= m_max (the eSCN O(L^6) -> O(L^3) trick);
+  * multi-head attention: invariant (l=0) query/key features produce
+    per-edge logits, normalised online over incoming edges, weighting the
+    full irrep message;
+  * messages are rotated back and scatter-summed; equivariant RMS norm and
+    a gated equivariant FFN complete the block.
+
+Simplifications vs the released model (recorded in DESIGN.md): the
+distance-dependent filter is a per-edge channel gate (not full per-edge
+weight generation), and the S2 pointwise activation is an equivariant
+sigmoid gate. Both preserve the kernel structure (rotate -> per-m dense
+mix -> rotate back) that dominates compute.
+
+Scaling: edges are processed as a ``lax.scan`` over fixed-size chunks with
+online-softmax accumulation (the flash-attention trick). Wigner matrices
+are (re)built *inside* each chunk from the (E, 3) unit vectors — never
+materialised for the whole edge set (61M edges x 49x49 would be ~0.5 TB).
+Degenerate edges (pads / zero-length) carry no valid frame and are masked.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as mcommon
+from repro.models.gnn import common as g
+from repro.models.gnn import so3
+
+
+@dataclasses.dataclass(frozen=True)
+class EqV2Config:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    channels: int = 128          # sphere channels (d_hidden)
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 64
+    cutoff: float = 12.0
+    n_species: int = 100
+    edge_chunk: int = 8192
+    edge_shard_axes: tuple = ()   # mesh axes to shard each edge chunk over
+    dtype: object = jnp.float32
+
+    @property
+    def s_dim(self) -> int:
+        return (self.l_max + 1) ** 2
+
+
+def _m_indices(l_max: int, m: int) -> tuple[list[int], list[int]]:
+    """S-dim indices of the (+m, -m) coefficients for all l >= |m|."""
+    if m == 0:
+        pos = [l * l + l for l in range(l_max + 1)]
+        return pos, pos
+    pos = [l * l + l + m for l in range(m, l_max + 1)]
+    neg = [l * l + l - m for l in range(m, l_max + 1)]
+    return pos, neg
+
+
+def init_params(cfg: EqV2Config, key: jax.Array, *, abstract: bool = False):
+    f = mcommon.ParamFactory(key, cfg.dtype, abstract=abstract)
+    c, L = cfg.channels, cfg.l_max
+    p = {"embed": f.dense((cfg.n_species, c), ("gnn_in", "gnn_out"), scale=1.0),
+         "rbf0": f.dense((cfg.n_rbf, c), ("gnn_in", "gnn_out")),
+         "rbf0b": f.zeros((c,), ("gnn_out",))}
+    for i in range(cfg.n_layers):
+        n0 = L + 1
+        p[f"so2_m0_{i}"] = f.dense((n0 * c, n0 * c), ("gnn_in", "gnn_out"))
+        for m in range(1, cfg.m_max + 1):
+            nl = L + 1 - m
+            p[f"so2_r{m}_{i}"] = f.dense((nl * c, nl * c), ("gnn_in", "gnn_out"))
+            p[f"so2_i{m}_{i}"] = f.dense((nl * c, nl * c), ("gnn_in", "gnn_out"),
+                                         scale=1e-2)
+        p[f"gate_{i}"] = f.dense((cfg.n_rbf, c), ("gnn_in", "gnn_out"))
+        p[f"gateb_{i}"] = f.zeros((c,), ("gnn_out",))
+        p[f"attn_q_{i}"] = f.dense((c, cfg.n_heads), ("gnn_in", "gnn_out"))
+        p[f"attn_k_{i}"] = f.dense((c, cfg.n_heads), ("gnn_in", "gnn_out"))
+        p[f"proj_{i}"] = f.dense((c, c), ("gnn_in", "gnn_out"), scale=0.02)
+        p[f"norm_{i}"] = f.ones((L + 1, c), ("gnn_l", "gnn_out"))
+        p[f"ffn_in_{i}"] = f.dense((c, c), ("gnn_in", "gnn_out"))
+        p[f"ffn_gate_{i}"] = f.dense((c, (L + 1) * c), ("gnn_in", "gnn_out"))
+        p[f"ffn_gateb_{i}"] = f.zeros(((L + 1) * c,), ("gnn_out",))
+        p[f"ffn_out_{i}"] = f.dense((c, c), ("gnn_in", "gnn_out"), scale=0.02)
+        p[f"ffn_norm_{i}"] = f.ones((L + 1, c), ("gnn_l", "gnn_out"))
+    p["head0"] = f.dense((c, c), ("gnn_in", "gnn_out"))
+    p["head0b"] = f.zeros((c,), ("gnn_out",))
+    p["head1"] = f.dense((c, 1), ("gnn_in", "gnn_out"))
+    return mcommon.split_tree(p)
+
+
+def _eq_norm(x: jax.Array, w: jax.Array, l_max: int) -> jax.Array:
+    """Equivariant RMS norm: per (l, channel) scale by 1/rms over m."""
+    outs = []
+    for l in range(l_max + 1):
+        blk = x[:, l * l:(l + 1) * (l + 1), :]
+        rms = jnp.sqrt(jnp.mean(blk * blk, axis=(1, 2), keepdims=True) + 1e-8)
+        outs.append(blk / rms * w[l])
+    return jnp.concatenate(outs, axis=1)
+
+
+def _so2_conv(xr: jax.Array, p: dict, i: int, cfg: EqV2Config) -> jax.Array:
+    """Per-m dense mixing in the edge frame. xr (E, S, C) -> (E, S, C);
+    coefficients with |m| > m_max are dropped (eSCN truncation)."""
+    e, s, c = xr.shape
+    out = jnp.zeros_like(xr)
+    idx0, _ = _m_indices(cfg.l_max, 0)
+    x0 = xr[:, jnp.asarray(idx0), :].reshape(e, -1)
+    y0 = (x0 @ p[f"so2_m0_{i}"]).reshape(e, len(idx0), c)
+    out = out.at[:, jnp.asarray(idx0), :].set(y0)
+    for m in range(1, cfg.m_max + 1):
+        pos, neg = _m_indices(cfg.l_max, m)
+        xp = xr[:, jnp.asarray(pos), :].reshape(e, -1)
+        xn = xr[:, jnp.asarray(neg), :].reshape(e, -1)
+        wr, wi = p[f"so2_r{m}_{i}"], p[f"so2_i{m}_{i}"]
+        yp = (xp @ wr - xn @ wi).reshape(e, len(pos), c)
+        yn = (xp @ wi + xn @ wr).reshape(e, len(neg), c)
+        out = out.at[:, jnp.asarray(pos), :].set(yp)
+        out = out.at[:, jnp.asarray(neg), :].set(yn)
+    return out
+
+
+def _layer(x, p, i, edges, cfg: EqV2Config):
+    """One eSCN attention block + FFN.
+
+    edges: chunked arrays (n_chunks, chunk, ...) =
+      (src, dst, unit, rbf, edge_ok); Wigner matrices built per chunk.
+    """
+    n = x.shape[0]
+    src_c, dst_c, unit_c, rbf_c, ok_c = edges
+    h = _eq_norm(x, p[f"norm_{i}"], cfg.l_max)
+    inv = h[:, 0, :]
+    q = inv @ p[f"attn_q_{i}"]                           # (N, heads)
+    hd = cfg.channels // cfg.n_heads
+
+    def chunk(carry, xs):
+        num, den = carry
+        s_c, d_c, u_c, r_c, o_c = xs
+        valid = o_c[:, None]
+        s_s = jnp.minimum(s_c, n - 1)
+        d_s = jnp.minimum(d_c, n - 1)
+        rot = so3.rotation_to_z(u_c)
+        wig = so3.wigner_d_from_r(rot, cfg.l_max)        # (e, S, S)
+        xj = h[s_s]                                      # (e, S, C)
+        xr = jnp.einsum("epq,eqc->epc", wig, xj)
+        y = _so2_conv(xr, p, i, cfg)
+        gate = jax.nn.silu(r_c @ p[f"gate_{i}"] + p[f"gateb_{i}"])
+        y = y * gate[:, None, :]
+        msg = jnp.einsum("eqp,eqc->epc", wig, y)         # rotate back (D^T)
+        k = msg[:, 0, :] @ p[f"attn_k_{i}"]              # (e, heads)
+        logit = 8.0 * jnp.tanh((q[d_s] + k) / 8.0)
+        a = jnp.exp(logit) * valid
+        msg_h = msg.reshape(-1, cfg.s_dim, cfg.n_heads, hd)
+        msg_w = (msg_h * a[:, None, :, None]).reshape(-1, cfg.s_dim,
+                                                      cfg.channels)
+        num = num + g.scatter_sum(msg_w, d_c, n)
+        den = den + g.scatter_sum(jnp.repeat(a, hd, axis=-1), d_c, n)
+        return (num, den), None
+
+    init = (jnp.zeros_like(x), jnp.zeros((n, cfg.channels), x.dtype))
+    (num, den), _ = jax.lax.scan(chunk, init,
+                                 (src_c, dst_c, unit_c, rbf_c, ok_c))
+    agg = num / jnp.maximum(den, 1e-9)[:, None, :]
+    x = x + agg @ p[f"proj_{i}"]
+
+    h2 = _eq_norm(x, p[f"ffn_norm_{i}"], cfg.l_max)
+    inv2 = h2[:, 0, :]
+    gates = jax.nn.sigmoid(inv2 @ p[f"ffn_gate_{i}"] + p[f"ffn_gateb_{i}"])
+    gates = gates.reshape(-1, cfg.l_max + 1, cfg.channels)
+    u = h2 @ p[f"ffn_in_{i}"]
+    lidx = np.concatenate([[l] * (2 * l + 1) for l in range(cfg.l_max + 1)])
+    u = u * gates[:, jnp.asarray(lidx), :]
+    x = x + u @ p[f"ffn_out_{i}"]
+    return x
+
+
+def _chunked(a: jax.Array, n_chunks: int) -> jax.Array:
+    return a.reshape((n_chunks, a.shape[0] // n_chunks) + a.shape[1:])
+
+
+def forward(params, batch: g.GraphBatch, cfg: EqV2Config) -> jax.Array:
+    """Returns per-graph energies."""
+    n = batch.node_feat.shape[0]
+    e_total = batch.edge_src.shape[0]
+    species = batch.node_feat[:, 0].astype(jnp.int32) % cfg.n_species
+    x = jnp.zeros((n, cfg.s_dim, cfg.channels), cfg.dtype)
+    x = x.at[:, 0, :].set(params["embed"][species])
+
+    x_ext = jnp.concatenate([batch.coords, jnp.zeros_like(batch.coords[:1])], 0)
+    src = jnp.minimum(batch.edge_src, n)
+    dst = jnp.minimum(batch.edge_dst, n)
+    dvec = x_ext[dst] - x_ext[src]
+    dist = jnp.sqrt(jnp.sum(dvec * dvec, -1) + 1e-12)
+    # degenerate edges (pads, zero-length self loops) have no frame
+    edge_ok = (batch.edge_src < n) & (batch.edge_dst < n) & (dist > 1e-6)
+    unit = dvec / jnp.maximum(dist, 1e-9)[:, None]
+    centers = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+    gamma = 1.0 / (centers[1] - centers[0]) ** 2
+    rbf = jnp.exp(-gamma * (dist[:, None] - centers[None, :]) ** 2)
+    x = x.at[:, 0, :].add(g.scatter_sum(
+        jax.nn.silu(rbf @ params["rbf0"] + params["rbf0b"])
+        * edge_ok[:, None], batch.edge_dst, n))
+
+    n_chunks = max(e_total // min(cfg.edge_chunk, e_total), 1)
+    assert e_total % n_chunks == 0, (e_total, n_chunks)
+    edges = tuple(_chunked(a, n_chunks) for a in
+                  (batch.edge_src, batch.edge_dst, unit, rbf, edge_ok))
+    if cfg.edge_shard_axes:
+        # keep each chunk sharded across the data axes (the (E,)->(n_chunks,
+        # chunk) reshape would otherwise replicate when n_chunks does not
+        # divide the shard count)
+        from jax.sharding import PartitionSpec as P
+        edges = tuple(jax.lax.with_sharding_constraint(
+            a, P(None, cfg.edge_shard_axes, *([None] * (a.ndim - 2))))
+            for a in edges)
+    for i in range(cfg.n_layers):
+        x = _layer(x, params, i, edges, cfg)
+
+    inv = x[:, 0, :]
+    e_atom = jax.nn.silu(inv @ params["head0"] + params["head0b"])
+    e_atom = (e_atom @ params["head1"])[:, 0]
+    if batch.graph_id is None:
+        return e_atom.sum(keepdims=True)
+    return jax.ops.segment_sum(e_atom, batch.graph_id,
+                               num_segments=batch.n_graphs)
+
+
+def loss_fn(params, batch: g.GraphBatch, targets: jax.Array, cfg: EqV2Config):
+    e = forward(params, batch, cfg)
+    loss = jnp.mean((e - targets) ** 2)
+    return loss, {"mse": loss}

@@ -1,0 +1,216 @@
+"""SO(3) machinery for equivariant GNNs (EquiformerV2 / eSCN).
+
+* ``real_sph_harm`` — real spherical harmonics up to l_max (recurrences,
+  orthonormal convention, m ordered -l..l, no Condon-Shortley phase).
+* ``wigner_d_from_r`` — rotation matrices of the real SH basis computed
+  from the 3x3 Cartesian rotation by the Ivanic & Ruedenberg (1996, + 1998
+  erratum) recursion. All recursion indices/coefficients are static
+  (numpy, built once per l_max) so the per-edge computation is pure
+  batched gathers + multiplies — TPU-friendly, no data-dependent control.
+* ``rotation_to_z`` — the eSCN edge alignment: R with R @ u = e_z.
+
+Validated by tests/test_so3.py: orthogonality, homomorphism
+D(R1 R2) = D(R1) D(R2), and the defining property Y(R r) = D(R) Y(r)
+for all l <= l_max.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# real spherical harmonics
+# ---------------------------------------------------------------------------
+
+def real_sph_harm(vecs: jax.Array, l_max: int) -> jax.Array:
+    """vecs (..., 3) unit vectors -> (..., (l_max+1)^2), m ordered -l..l."""
+    x, y, z = vecs[..., 0], vecs[..., 1], vecs[..., 2]
+    rxy2 = x * x + y * y
+    rxy = jnp.sqrt(rxy2 + 1e-30)
+    ct = z                                 # cos(theta)
+    st = rxy                               # sin(theta)
+    cphi = jnp.where(rxy > 1e-15, x / rxy, 1.0)
+    sphi = jnp.where(rxy > 1e-15, y / rxy, 0.0)
+
+    # cos(m phi), sin(m phi) by recurrence
+    cos_m = [jnp.ones_like(cphi), cphi]
+    sin_m = [jnp.zeros_like(sphi), sphi]
+    for m in range(2, l_max + 1):
+        cos_m.append(2 * cphi * cos_m[-1] - cos_m[-2])
+        sin_m.append(2 * cphi * sin_m[-1] - sin_m[-2])
+
+    # associated Legendre P_l^m(ct) * st^m  (no Condon-Shortley), recurrences
+    p = {}
+    p[(0, 0)] = jnp.ones_like(ct)
+    for m in range(1, l_max + 1):
+        p[(m, m)] = (2 * m - 1) * p[(m - 1, m - 1)] * st
+    for m in range(0, l_max):
+        p[(m + 1, m)] = (2 * m + 1) * ct * p[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            p[(l, m)] = ((2 * l - 1) * ct * p[(l - 1, m)]
+                         - (l + m - 1) * p[(l - 2, m)]) / (l - m)
+
+    out = []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            k = np.sqrt((2 * l + 1) / (4 * np.pi)
+                        * float(math.factorial(l - am))
+                        / float(math.factorial(l + am)))
+            if m == 0:
+                out.append(k * p[(l, 0)])
+            elif m > 0:
+                out.append(np.sqrt(2.0) * k * p[(l, am)] * cos_m[am])
+            else:
+                out.append(np.sqrt(2.0) * k * p[(l, am)] * sin_m[am])
+    return jnp.stack(out, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Wigner-D (real basis) — Ivanic-Ruedenberg recursion with static tables
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _ivanic_tables(l: int):
+    """Static coefficient/index tables for the D^(l-1) -> D^l step."""
+    dim, prev = 2 * l + 1, 2 * l - 1
+    ms = np.arange(-l, l + 1)
+
+    # --- P-term column tables (depend on n) ---
+    # P_i(mu, n) = a1*R1[i, c1]*Dp[mu, d1] + a2*R1[i, c2]*Dp[mu, d2]
+    a1 = np.zeros(dim); c1 = np.zeros(dim, np.int64); d1 = np.zeros(dim, np.int64)
+    a2 = np.zeros(dim); c2 = np.zeros(dim, np.int64); d2 = np.zeros(dim, np.int64)
+    for j, n in enumerate(ms):
+        if abs(n) < l:
+            a1[j], c1[j], d1[j] = 1.0, 1, n + (l - 1)       # R1[:,0], Dp[:,n]
+            a2[j] = 0.0
+        elif n == l:
+            a1[j], c1[j], d1[j] = 1.0, 2, (l - 1) + (l - 1)   # R1[:,1]*Dp[:,l-1]
+            a2[j], c2[j], d2[j] = -1.0, 0, 0                  # -R1[:,-1]*Dp[:,-l+1]
+        else:  # n == -l
+            a1[j], c1[j], d1[j] = 1.0, 2, 0                   # R1[:,1]*Dp[:,-l+1]
+            a2[j], c2[j], d2[j] = 1.0, 0, (l - 1) + (l - 1)   # R1[:,-1]*Dp[:,l-1]
+
+    # --- row (m) tables: coefficients u,v,w and Dprev row indices ---
+    u = np.zeros((dim, dim)); v = np.zeros((dim, dim)); w = np.zeros((dim, dim))
+    mu_u = np.zeros(dim, np.int64)
+    vmu1 = np.zeros(dim, np.int64); vs1 = np.zeros(dim)
+    vmu2 = np.zeros(dim, np.int64); vs2 = np.zeros(dim)
+    wmu1 = np.zeros(dim, np.int64); wmu2 = np.zeros(dim, np.int64)
+    for i, m in enumerate(ms):
+        for j, n in enumerate(ms):
+            denom = float((l + n) * (l - n)) if abs(n) < l \
+                else float(2 * l * (2 * l - 1))
+            uu = np.sqrt((l + m) * (l - m) / denom) if (l + m) * (l - m) > 0 else 0.0
+            dm0 = 1.0 if m == 0 else 0.0
+            vv = 0.5 * np.sqrt((1 + dm0) * (l + abs(m) - 1) * (l + abs(m))
+                               / denom) * (1 - 2 * dm0)
+            ww_ = (l - abs(m) - 1) * (l - abs(m))
+            ww = -0.5 * np.sqrt(ww_ / denom) * (1 - dm0) if ww_ > 0 else 0.0
+            u[i, j], v[i, j], w[i, j] = uu, vv, ww
+        # U row index (clamped; u=0 when out of range)
+        mu_u[i] = int(np.clip(m, -(l - 1), l - 1)) + (l - 1)
+        # V term structure
+        if m == 0:
+            vmu1[i], vs1[i] = 1 + (l - 1), 1.0        # P_1(1, n)
+            vmu2[i], vs2[i] = -1 + (l - 1), 1.0       # P_-1(-1, n)
+        elif m > 0:
+            d1m = 1.0 if m == 1 else 0.0
+            vmu1[i], vs1[i] = int(np.clip(m - 1, -(l - 1), l - 1)) + (l - 1), \
+                np.sqrt(1 + d1m)
+            vmu2[i], vs2[i] = int(np.clip(-m + 1, -(l - 1), l - 1)) + (l - 1), \
+                -(1 - d1m)
+        else:
+            d1m = 1.0 if m == -1 else 0.0
+            vmu1[i], vs1[i] = int(np.clip(m + 1, -(l - 1), l - 1)) + (l - 1), \
+                (1 - d1m)
+            vmu2[i], vs2[i] = int(np.clip(-m - 1, -(l - 1), l - 1)) + (l - 1), \
+                np.sqrt(1 + d1m)
+        # W term structure (w=0 already handles |m| >= l-1 rows)
+        if m > 0:
+            wmu1[i] = int(np.clip(m + 1, -(l - 1), l - 1)) + (l - 1)
+            wmu2[i] = int(np.clip(-m - 1, -(l - 1), l - 1)) + (l - 1)
+        elif m < 0:
+            wmu1[i] = int(np.clip(m - 1, -(l - 1), l - 1)) + (l - 1)
+            wmu2[i] = int(np.clip(-m + 1, -(l - 1), l - 1)) + (l - 1)
+
+    return dict(a1=a1, c1=c1, d1=d1, a2=a2, c2=c2, d2=d2, u=u, v=v, w=w,
+                mu_u=mu_u, vmu1=vmu1, vs1=vs1, vmu2=vmu2, vs2=vs2,
+                wmu1=wmu1, wmu2=wmu2, w_sign_m=(ms > 0).astype(np.float64)
+                - (ms < 0).astype(np.float64))
+
+
+def _wigner_step(r1: jax.Array, dprev: jax.Array, l: int) -> jax.Array:
+    """D^(l-1) (..., 2l-1, 2l-1) -> D^l (..., 2l+1, 2l+1).
+
+    r1 is the l=1 rotation in SH order (m = -1, 0, 1).
+    """
+    t = _ivanic_tables(l)
+    # P_i(mu, n) for i in {-1,0,1}: (..., 3, 2l-1, 2l+1)
+    term1 = (r1[..., :, t["c1"]][..., :, None, :]
+             * dprev[..., None, :, t["d1"]] * t["a1"])
+    term2 = (r1[..., :, t["c2"]][..., :, None, :]
+             * dprev[..., None, :, t["d2"]] * t["a2"])
+    p = term1 + term2                                   # (..., i, mu, n)
+    p_m1, p_0, p_p1 = p[..., 0, :, :], p[..., 1, :, :], p[..., 2, :, :]
+
+    big_u = p_0[..., t["mu_u"], :]                      # (..., m, n)
+    big_v = (p_p1[..., t["vmu1"], :] * t["vs1"][:, None]
+             + p_m1[..., t["vmu2"], :] * t["vs2"][:, None])
+    sgn = t["w_sign_m"]
+    big_w = (jnp.where(sgn[:, None] > 0,
+                       p_p1[..., t["wmu1"], :] + p_m1[..., t["wmu2"], :],
+                       p_p1[..., t["wmu1"], :] - p_m1[..., t["wmu2"], :]))
+    big_w = big_w * (jnp.abs(sgn)[:, None])
+    return t["u"] * big_u + t["v"] * big_v + t["w"] * big_w
+
+
+def wigner_blocks(r: jax.Array, l_max: int) -> list[jax.Array]:
+    """Cartesian rotations (..., 3, 3) -> [D^0, D^1, ..., D^l_max]."""
+    # real-SH order (m=-1,0,1) <-> cartesian (y, z, x)
+    perm = jnp.asarray([1, 2, 0])
+    r1 = r[..., perm[:, None], perm[None, :]]
+    blocks = [jnp.ones(r.shape[:-2] + (1, 1), r.dtype), r1]
+    for l in range(2, l_max + 1):
+        blocks.append(_wigner_step(r1, blocks[-1], l))
+    return blocks[: l_max + 1]
+
+
+def wigner_d_from_r(r: jax.Array, l_max: int) -> jax.Array:
+    """Block-diagonal (..., S, S), S = (l_max+1)^2."""
+    blocks = wigner_blocks(r, l_max)
+    s = (l_max + 1) ** 2
+    out = jnp.zeros(r.shape[:-2] + (s, s), r.dtype)
+    off = 0
+    for l, b in enumerate(blocks):
+        out = out.at[..., off:off + 2 * l + 1, off:off + 2 * l + 1].set(b)
+        off += 2 * l + 1
+    return out
+
+
+def rotation_to_z(u: jax.Array) -> jax.Array:
+    """(..., 3) unit vectors -> R with R @ u = e_z (Rodrigues; the poles
+    fall back to +/- identity-ish rotations)."""
+    z = jnp.zeros_like(u).at[..., 2].set(1.0)
+    v = jnp.cross(u, z)                        # rotation axis * sin
+    c = u[..., 2:3]                            # cos(angle)
+    s2 = jnp.sum(v * v, axis=-1, keepdims=True)
+    eye = jnp.broadcast_to(jnp.eye(3, dtype=u.dtype), u.shape[:-1] + (3, 3))
+    vx = jnp.zeros(u.shape[:-1] + (3, 3), u.dtype)
+    vx = vx.at[..., 0, 1].set(-v[..., 2]).at[..., 0, 2].set(v[..., 1])
+    vx = vx.at[..., 1, 0].set(v[..., 2]).at[..., 1, 2].set(-v[..., 0])
+    vx = vx.at[..., 2, 0].set(-v[..., 1]).at[..., 2, 1].set(v[..., 0])
+    coef = jnp.where(s2 > 1e-12, (1.0 - c) / jnp.maximum(s2, 1e-12), 0.5)
+    r = eye + vx + coef[..., None] * (vx @ vx)
+    # u == -e_z: 180-degree rotation about x
+    flip = jnp.broadcast_to(
+        jnp.asarray([[1., 0., 0.], [0., -1., 0.], [0., 0., -1.]], u.dtype),
+        r.shape)
+    near_neg = (c[..., 0] < -1.0 + 1e-6)[..., None, None]
+    return jnp.where(near_neg, flip, r)

@@ -1,0 +1,291 @@
+"""Decoder-only LM stack (dense + MoE) covering the five assigned archs.
+
+* Layers are stacked along axis 0 and executed with ``jax.lax.scan`` so
+  the HLO stays O(1) in depth (a 96-layer Nemotron-340B compiles in
+  seconds), with per-layer remat for activation memory.
+* Attention is GQA with RoPE and flash-style chunked compute.
+* MoE layers use the expert-parallel block in ``moe.py``.
+* Parameter logical axes are emitted next to init; ``repro.dist.sharding``
+  turns them into mesh PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.attention import (KVCache, apply_rope, decode_attention,
+                                    flash_attention, rope_angles)
+from repro.models.moe import MoESettings, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "swiglu"                 # swiglu | geglu | relu2
+    moe: MoESettings | None = None
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 512
+    k_chunk: int = 1024
+    embed_scale: bool = False           # gemma multiplies embeddings by sqrt(d)
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS bookkeeping)."""
+        d, l = self.d_model, self.n_layers
+        attn = d * self.n_heads * self.head_dim * 2 \
+            + d * self.n_kv_heads * self.head_dim * 2
+        if self.moe:
+            ff = self.moe.n_experts * d * self.moe.d_ff_expert * 3 \
+                + d * self.moe.n_experts
+        else:
+            n_mats = 3 if common.is_gated(self.act) else 2
+            ff = n_mats * d * self.d_ff
+        return l * (attn + ff + 2 * d) + 2 * self.vocab * d + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active (per-token) params — MoE counts only routed experts."""
+        if not self.moe:
+            return self.n_params
+        d, l, m = self.d_model, self.n_layers, self.moe
+        attn = d * self.n_heads * self.head_dim * 2 \
+            + d * self.n_kv_heads * self.head_dim * 2
+        ff = m.top_k * d * m.d_ff_expert * 3 + d * m.n_experts
+        return l * (attn + ff + 2 * d) + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key: jax.Array, *, abstract: bool = False
+                ) -> tuple[dict, dict]:
+    """Returns (params, logical_axes) trees."""
+    f = common.ParamFactory(key, cfg.dtype, abstract=abstract)
+    d, l = cfg.d_model, cfg.n_layers
+    hq = cfg.n_heads * cfg.head_dim
+    hkv = cfg.n_kv_heads * cfg.head_dim
+
+    layers: dict = {
+        "ln1": f.zeros((l, d), ("layer", "embed_nm")),
+        "ln2": f.zeros((l, d), ("layer", "embed_nm")),
+        "wq": f.dense((l, d, hq), ("layer", "embed", "heads")),
+        "wk": f.dense((l, d, hkv), ("layer", "embed", "kv_heads")),
+        "wv": f.dense((l, d, hkv), ("layer", "embed", "kv_heads")),
+        "wo": f.dense((l, hq, d), ("layer", "heads", "embed"),
+                      scale=1.0 / (hq ** 0.5 * (2 * l) ** 0.5)),
+    }
+    if cfg.moe:
+        m = cfg.moe
+        layers.update(
+            router=f.dense((l, d, m.n_experts), ("layer", "embed", "experts"),
+                           scale=0.02),
+            # expert weights: E -> model (EP), expert_ff -> fsdp; the embed
+            # dim stays replicated (it is the shard_map contraction dim)
+            we_in=f.dense((l, m.n_experts, d, m.d_ff_expert),
+                          ("layer", "experts", "embed_r", "expert_ff")),
+            we_gate=f.dense((l, m.n_experts, d, m.d_ff_expert),
+                            ("layer", "experts", "embed_r", "expert_ff")),
+            we_out=f.dense((l, m.n_experts, m.d_ff_expert, d),
+                           ("layer", "experts", "expert_ff", "embed_r"),
+                           scale=1.0 / (m.d_ff_expert ** 0.5 * (2 * l) ** 0.5)),
+        )
+    else:
+        layers["w_in"] = f.dense((l, d, cfg.d_ff), ("layer", "embed", "ff"))
+        if common.is_gated(cfg.act):
+            layers["w_gate"] = f.dense((l, d, cfg.d_ff),
+                                       ("layer", "embed", "ff"))
+        layers["w_out"] = f.dense((l, cfg.d_ff, d), ("layer", "ff", "embed"),
+                                  scale=1.0 / (cfg.d_ff ** 0.5 * (2 * l) ** 0.5))
+
+    tree = {
+        "embed": f.dense((cfg.vocab, d), ("vocab", "embed"), scale=1.0),
+        "lm_head": f.dense((d, cfg.vocab), ("embed", "vocab")),
+        "final_norm": f.zeros((d,), ("embed_nm",)),
+        "layers": layers,
+    }
+    return common.split_tree(tree)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_block(x, lp, cfg: LMConfig, cos, sin):
+    b, s, d = x.shape
+    h = common.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = flash_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk,
+                        k_chunk=cfg.k_chunk)
+    return x + o.reshape(b, s, -1) @ lp["wo"], (k, v)
+
+
+def _ffn_block(x, lp, cfg: LMConfig, mesh, batch_axes, fsdp_axes):
+    h = common.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        y, aux = moe_ffn(h, lp, cfg.moe, mesh=mesh, batch_axes=batch_axes,
+                         fsdp_axes=fsdp_axes)
+    else:
+        up = _bshard(h @ lp["w_in"], batch_axes, None, "model")
+        gate = _bshard(h @ lp["w_gate"], batch_axes, None, "model") \
+            if common.is_gated(cfg.act) else None
+        y = common.activation(cfg.act, up, gate) @ lp["w_out"]
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _bshard(x: jax.Array, batch_axes: tuple, *rest) -> jax.Array:
+    """Constrain activations to batch sharding. Without this GSPMD may
+    keep activations batch-REPLICATED to avoid weight gathers (observed:
+    67 GB/device logits and 22 GB scan residuals on gemma-7b train_4k —
+    EXPERIMENTS.md §Perf B0)."""
+    if not batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(batch_axes, *rest) if rest else \
+        P(batch_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig, *, mesh=None,
+            batch_axes: tuple = (), fsdp_axes: tuple = (),
+            collect_kv: bool = False):
+    """tokens (B, S) -> logits (B, S, V). Optionally returns per-layer KV
+    (for prefill). Returns (logits, aux_loss, kv | None)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    cos, sin = rope_angles(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+
+    def layer(x, lp):
+        # the remat-saved value is the layer *entry* activation: pin it
+        # sequence-sharded over the model axis (16x less residual memory)
+        # but compute the body batch-sharded — the pair of constraints
+        # costs one (B,S,d)/16 all-gather per layer and keeps attention/
+        # FFN shardings intact (EXPERIMENTS.md §Perf B0, iteration 3)
+        x = _bshard(x, batch_axes, "model", None)
+        x = _bshard(x, batch_axes)
+        x, kv = _attn_block(x, lp, cfg, cos, sin)
+        x, aux = _ffn_block(x, lp, cfg, mesh, batch_axes, fsdp_axes)
+        x = _bshard(x, batch_axes, "model", None)
+        return x, (aux, kv if collect_kv else None)
+
+    body = layer
+    if cfg.remat:
+        body = jax.checkpoint(layer, prevent_cse=False)
+    x, (auxs, kvs) = jax.lax.scan(body, x, params["layers"])
+
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    logits = _bshard(logits, batch_axes, None, "model")
+    return logits, auxs.mean(), kvs
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig, **kw) -> tuple:
+    logits, aux, _ = forward(params, batch["tokens"], cfg, **kw)
+    ce = common.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    return ce + aux_w * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, tokens: jax.Array, cfg: LMConfig, *, mesh=None,
+            batch_axes: tuple = (), fsdp_axes: tuple = (),
+            max_len: int | None = None) -> tuple[jax.Array, KVCache]:
+    """Process the full prompt; returns (last-position logits, filled cache).
+
+    ``max_len`` reserves decode headroom in the cache (defaults to the
+    prompt length — i.e. a cache only usable for scoring)."""
+    b, s = tokens.shape
+    logits, _, kvs = forward(params, tokens, cfg, mesh=mesh,
+                             batch_axes=batch_axes, fsdp_axes=fsdp_axes,
+                             collect_kv=True)
+    k, v = kvs                                  # each (L, B, S, Hk, D)
+    if max_len is not None and max_len > s:
+        pad = ((0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    cache = KVCache(k=k, v=v, length=jnp.full((b,), s, jnp.int32))
+    return logits[:, -1], cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cache: KVCache,
+                cfg: LMConfig, *, mesh=None, batch_axes: tuple = (),
+                fsdp_axes: tuple = ()) -> tuple[jax.Array, KVCache]:
+    """One decode step. tokens (B, 1) -> (logits (B, V), updated cache)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    pos = cache.length                          # (B,)
+    cos, sin = rope_angles(pos[:, None], cfg.head_dim, cfg.rope_theta)
+    bidx = jnp.arange(b)
+    quant = cache.quantized
+
+    def layer(x, inputs):
+        if quant:
+            lp, kc, vc, ks, vs = inputs
+        else:
+            lp, kc, vc = inputs
+            ks = vs = None
+        h = common.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = (h @ lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if quant:
+            from repro.models.attention import (decode_attention_q8,
+                                                quantize_kv)
+            kq, ksc = quantize_kv(k[:, 0])
+            vq, vsc = quantize_kv(v[:, 0])
+            kc = kc.at[bidx, pos].set(kq)
+            vc = vc.at[bidx, pos].set(vq)
+            ks = ks.at[bidx, pos].set(ksc)
+            vs = vs.at[bidx, pos].set(vsc)
+            o = decode_attention_q8(q, kc, ks, vc, vs, pos + 1)
+            x = x + o.reshape(b, 1, -1) @ lp["wo"]
+            x, _ = _ffn_block(x, lp, cfg, mesh, batch_axes, fsdp_axes)
+            return x, (kc, vc, ks, vs)
+        kc = kc.at[bidx, pos].set(k[:, 0])
+        vc = vc.at[bidx, pos].set(v[:, 0])
+        o = decode_attention(q, kc, vc, pos + 1)
+        x = x + o.reshape(b, 1, -1) @ lp["wo"]
+        x, _ = _ffn_block(x, lp, cfg, mesh, batch_axes, fsdp_axes)
+        return x, (kc, vc)
+
+    if quant:
+        x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+            layer, x, (params["layers"], cache.k, cache.v,
+                       cache.k_scale, cache.v_scale))
+        new_cache = KVCache(k=k_new, v=v_new, length=cache.length + 1,
+                            k_scale=ks_new, v_scale=vs_new)
+    else:
+        x, (k_new, v_new) = jax.lax.scan(layer, x, (params["layers"],
+                                                    cache.k, cache.v))
+        new_cache = KVCache(k=k_new, v=v_new, length=cache.length + 1)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, new_cache

@@ -1,0 +1,2 @@
+"""Optimizers: sharded AdamW + gradient compression utilities."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401

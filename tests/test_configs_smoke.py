@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + no NaNs. Full configs are exercised only by
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import common as mcommon
+from repro.models import dlrm as dlrm_mod
+from repro.models import transformer as tfm
+from repro.models.gnn import common as gcommon
+from repro.models.gnn import egnn as egnn_mod
+from repro.models.gnn import equiformer_v2 as eqv2_mod
+from repro.models.gnn import graphsage as sage_mod
+from repro.models.gnn import schnet as schnet_mod
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+
+LM_ARCHS = ["qwen3-moe-30b-a3b", "moonshot-v1-16b-a3b", "nemotron-4-340b",
+            "gemma-7b", "minitron-4b"]
+GNN_ARCHS = ["equiformer-v2", "egnn", "schnet", "graphsage-reddit"]
+
+
+def _no_nans(tree):
+    return not any(bool(jnp.isnan(x).any()) for x in jax.tree.leaves(tree)
+                   if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_train_step(arch_id):
+    cfg = get_arch(arch_id).make_smoke()
+    params, _ = tfm.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    logits, aux, _ = tfm.forward(params, toks, cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert _no_nans({"l": logits})
+    opt = adamw_init(params)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: tfm.loss_fn(p, batch, cfg), has_aux=True)(params)
+    new_p, new_o, m = adamw_update(grads, opt, params, AdamWConfig())
+    assert _no_nans(new_p) and float(m["grad_norm"]) > 0
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_decode(arch_id):
+    cfg = get_arch(arch_id).make_smoke()
+    params, _ = tfm.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab)
+    full, _, _ = tfm.forward(params, toks, cfg)
+    _, cache = tfm.prefill(params, toks[:, :11], cfg, max_len=16)
+    logits, cache2 = tfm.decode_step(params, toks[:, 11:12], cache, cfg)
+    assert logits.shape == (2, cfg.vocab)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(full[:, 11], np.float32),
+                               atol=2e-3, rtol=2e-2)
+    assert int(cache2.length[0]) == 12
+
+
+def _gnn_smoke_batch(arch_id, cfg):
+    d_in = getattr(cfg, "d_in", 4)
+    return gcommon.random_graph_batch(KEY, 24, 96, d_in, coords=True,
+                                      n_classes=getattr(cfg, "n_classes", 5),
+                                      n_graphs=2)
+
+
+@pytest.mark.parametrize("arch_id", GNN_ARCHS)
+def test_gnn_smoke_train_step(arch_id):
+    cfg = get_arch(arch_id).make_smoke()
+    mod = {"equiformer-v2": eqv2_mod, "egnn": egnn_mod, "schnet": schnet_mod,
+           "graphsage-reddit": sage_mod}[arch_id]
+    batch = _gnn_smoke_batch(arch_id, cfg)
+    params, _ = mod.init_params(cfg, KEY)
+
+    if arch_id == "graphsage-reddit":
+        out = sage_mod.forward_full(params, batch, cfg)
+        assert out.shape == (24, cfg.n_classes)
+        loss_fn = lambda p: sage_mod.loss_full(p, batch, cfg)[0]
+    else:
+        targets = jnp.zeros((2,))
+        if arch_id == "egnn":
+            out, coords = mod.forward(params, batch, cfg)
+            assert coords.shape == batch.coords.shape
+        else:
+            out = mod.forward(params, batch, cfg)
+        assert out.shape == (2,)
+        loss_fn = lambda p: mod.loss_fn(p, batch, targets, cfg)[0]
+    assert _no_nans({"o": out})
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    opt = adamw_init(params)
+    new_p, _, m = adamw_update(grads, opt, params, AdamWConfig())
+    assert _no_nans(new_p)
+    assert np.isfinite(float(loss))
+
+
+def test_dlrm_smoke_train_step():
+    cfg = get_arch("dlrm-rm2").make_smoke()
+    params, _ = dlrm_mod.init_params(cfg, KEY)
+    b = 16
+    batch = {"dense": jax.random.normal(KEY, (b, cfg.n_dense)),
+             "sparse": jax.random.randint(KEY, (b, cfg.n_sparse, cfg.hot),
+                                          0, cfg.vocab_per_table),
+             "labels": jax.random.bernoulli(KEY, 0.3, (b,))}
+    out = dlrm_mod.forward(params, batch["dense"], batch["sparse"], cfg)
+    assert out.shape == (b,) and _no_nans({"o": out})
+    loss, grads = jax.value_and_grad(
+        lambda p: dlrm_mod.loss_fn(p, batch, cfg)[0])(params)
+    opt = adamw_init(params)
+    new_p, _, _ = adamw_update(grads, opt, params, AdamWConfig())
+    assert _no_nans(new_p) and np.isfinite(float(loss))
+
+
+def test_dlrm_retrieval_shapes():
+    cfg = get_arch("dlrm-rm2").make_smoke()
+    params, _ = dlrm_mod.init_params(cfg, KEY)
+    cands = jax.random.normal(KEY, (1000, cfg.embed_dim))
+    scores = dlrm_mod.retrieval_score(
+        params, jax.random.normal(KEY, (1, cfg.n_dense)),
+        jax.random.randint(KEY, (1, cfg.n_sparse, 1), 0, cfg.vocab_per_table),
+        cands, cfg)
+    assert scores.shape == (1000,) and _no_nans({"s": scores})
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_configs_construct(arch_id):
+    """Exact assigned configs instantiate (abstract init only) and match
+    the published dims."""
+    arch = get_arch(arch_id)
+    cfg = arch.make_config()
+    assert len(arch.shapes) == 4
+    if arch.family == "lm":
+        params, axes = tfm.init_params(cfg, KEY, abstract=True)
+        n = cfg.n_params
+        checks = {
+            "qwen3-moe-30b-a3b": (29e9, 32e9),
+            # the assignment pins 48L (the HF release has 27); 48L with
+            # 64x1408 experts gives ~28B total, ~4B active
+            "moonshot-v1-16b-a3b": (26e9, 30e9),
+            "nemotron-4-340b": (320e9, 350e9),
+            "gemma-7b": (8e9, 10e9),      # gemma counts tied embeddings once
+            "minitron-4b": (4e9, 6e9),
+        }
+        lo, hi = checks[arch_id]
+        assert lo <= n <= hi, (arch_id, n)
+        total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        assert abs(total - n) / n < 0.02
+
+
+def test_smoke_configs_are_small():
+    for arch_id in ARCH_IDS:
+        arch = get_arch(arch_id)
+        smoke = arch.make_smoke()
+        if arch.family == "lm":
+            assert smoke.n_layers <= 4 and smoke.d_model <= 128

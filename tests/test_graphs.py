@@ -1,0 +1,102 @@
+"""Graph substrate tests: builder invariants, generators, partitioner,
+mtx loader, blocks->batch conversion."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs import (SUITE_SPECS, build_graph, degree_stats, make_graph,
+                          validate_coloring)
+from repro.graphs.generators import load_mtx
+from repro.graphs.partition import balance_permutation, repartition, shard_bounds
+from repro.graphs.sampler import blocks_to_graphbatch, sample_blocks
+
+
+def test_builder_removes_self_loops_and_dups():
+    src = np.array([0, 0, 0, 1, 2, 2])
+    dst = np.array([0, 1, 1, 0, 1, 1])
+    g = build_graph(src, dst, 3)
+    # undirected unique edges: (0,1), (1,2)
+    assert g.n_edges == 2
+    deg = np.asarray(g.arrays.degrees)
+    np.testing.assert_array_equal(deg, [1, 2, 1])
+
+
+def test_csr_ell_consistency():
+    rng = np.random.default_rng(0)
+    g = build_graph(rng.integers(0, 50, 300), rng.integers(0, 50, 300), 50,
+                    ell_cap=16)
+    a = g.arrays
+    # every CSR entry appears in ELL or the tail
+    for u in range(50):
+        csr_nbrs = set(a.col_idx[a.row_ptr[u]:a.row_ptr[u + 1]].tolist())
+        ell_nbrs = set(x for x in a.ell_idx[u].tolist() if x < 50)
+        tail_nbrs = set(int(d) for s, d in zip(a.tail_src, a.tail_dst)
+                        if s == u)
+        assert ell_nbrs | tail_nbrs == csr_nbrs
+
+
+@pytest.mark.parametrize("name", list(SUITE_SPECS))
+def test_suite_generators_produce_valid_graphs(name):
+    g = make_graph(name, scale=0.02)
+    s = degree_stats(g)
+    assert s["nodes"] > 0 and s["edges"] > 0
+    a = g.arrays
+    assert a.row_ptr[-1] == len(a.col_idx)
+    assert (np.asarray(a.col_idx) < g.n_nodes).all()
+
+
+def test_degree_families_match_paper_table1():
+    """Qualitative Table I shapes: regular FEM vs road vs power-law."""
+    reg = degree_stats(make_graph("Queen_4147_s", scale=0.05))
+    road = degree_stats(make_graph("europe_osm_s", scale=0.05))
+    pl = degree_stats(make_graph("kron_g500-logn21_s", scale=0.05))
+    assert reg["d_max"] == reg["d_median"]          # regular mesh
+    assert road["d_median"] <= 3                     # road network
+    assert pl["d_max"] > 50 * max(pl["d_median"], 1)  # power law
+
+
+def test_partition_balances_degree():
+    g = make_graph("kron_g500-logn21_s", scale=0.05)
+    perm = balance_permutation(g, 8)
+    assert sorted(perm.tolist()) == list(range(g.n_nodes))
+    deg = np.asarray(g.arrays.degrees)
+    bounds = shard_bounds(g.n_nodes, 8)
+    loads = [deg[perm[bounds[i]:min(bounds[i + 1], g.n_nodes)]].sum()
+             for i in range(8)]
+    assert max(loads) < 1.3 * (sum(loads) / 8)
+
+
+def test_repartition_preserves_graph():
+    g = make_graph("hollywood-2009_s", scale=0.02)
+    g2, relabel = repartition(g, 4)
+    assert g2.n_edges == g.n_edges
+    assert sorted(np.asarray(g2.arrays.degrees).tolist()) == \
+        sorted(np.asarray(g.arrays.degrees).tolist())
+
+
+def test_load_mtx_roundtrip(tmp_path):
+    p = tmp_path / "t.mtx"
+    p.write_text("%%MatrixMarket matrix coordinate pattern symmetric\n"
+                 "% comment\n"
+                 "4 4 4\n1 2\n2 3\n3 4\n4 1\n")
+    g = load_mtx(str(p), name="ring4")
+    assert g.n_nodes == 4 and g.n_edges == 4
+    np.testing.assert_array_equal(np.asarray(g.arrays.degrees), [2, 2, 2, 2])
+
+
+def test_blocks_to_graphbatch_edges_point_child_to_parent():
+    g = make_graph("soc-LiveJournal1_s", scale=0.02)
+    rp = jnp.asarray(g.arrays.row_ptr)
+    ci = jnp.asarray(g.arrays.col_idx)
+    seeds = jnp.arange(4, dtype=jnp.int32)
+    blocks = sample_blocks(jax.random.PRNGKey(0), rp, ci, seeds, (3, 2))
+    feats = jax.random.normal(jax.random.PRNGKey(1), (g.n_nodes, 5))
+    batch = blocks_to_graphbatch(blocks, feats, None, None)
+    n_local = 4 + 12 + 24
+    assert batch.node_feat.shape == (n_local, 5)
+    assert batch.edge_src.shape == (12 + 24,)
+    dst = np.asarray(batch.edge_dst)
+    valid = dst < n_local
+    # parents of hop-1 edges are seeds (local ids 0..3)
+    assert (dst[:12][valid[:12]] < 4).all()

@@ -1,0 +1,155 @@
+"""Per-kernel validation: Pallas (interpret on CPU) vs pure-jnp oracle,
+swept over shapes/dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.compact import compact_pallas
+from repro.kernels.conflict import conflict_pallas
+from repro.kernels.mex_window import mex_window_pallas
+
+
+def _rand_case(rng, r, k, w, cmax=300):
+    nc = rng.integers(-2, cmax, size=(r, k)).astype(np.int32)
+    base = (rng.integers(0, max(cmax // w, 1), size=(r,)) * w).astype(np.int32)
+    extra = rng.random((r, w)) < 0.25
+    return jnp.asarray(nc), jnp.asarray(base), jnp.asarray(extra)
+
+
+@pytest.mark.parametrize("r", [1, 7, 32, 100, 257])
+@pytest.mark.parametrize("k", [1, 8, 40, 128])
+@pytest.mark.parametrize("w", [128, 256])
+def test_mex_window_matches_ref(r, k, w):
+    rng = np.random.default_rng(r * 1000 + k * 10 + w)
+    nc, base, extra = _rand_case(rng, r, k, w)
+    got = mex_window_pallas(nc, base, extra, w, interpret=True)
+    want = ref.mex_window_ref(nc, base, extra, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("tile_rows", [8, 16, 64])
+def test_mex_window_tile_sweep(tile_rows):
+    rng = np.random.default_rng(tile_rows)
+    nc, base, extra = _rand_case(rng, 130, 24, 128)
+    got = mex_window_pallas(nc, base, extra, 128, tile_rows=tile_rows,
+                            interpret=True)
+    want = ref.mex_window_ref(nc, base, extra, 128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mex_result_is_free_and_minimal():
+    """mex property: the returned color slot is not forbidden, and every
+    smaller slot IS forbidden."""
+    rng = np.random.default_rng(3)
+    nc, base, extra = _rand_case(rng, 200, 16, 128)
+    first = np.asarray(ref.mex_window_ref(nc, base, extra, 128))
+    ncn, basen, extran = map(np.asarray, (nc, base, extra))
+    for i in range(200):
+        rel = ncn[i] - basen[i]
+        forb = set(rel[(ncn[i] >= 0) & (rel >= 0) & (rel < 128)].tolist())
+        forb |= set(np.nonzero(extran[i])[0].tolist())
+        if first[i] < 0:
+            assert len(forb) == 128
+        else:
+            assert first[i] not in forb
+            assert all(s in forb for s in range(first[i]))
+
+
+@pytest.mark.parametrize("r,k", [(1, 1), (16, 8), (100, 33), (300, 128)])
+def test_conflict_matches_ref(r, k):
+    rng = np.random.default_rng(r + k)
+    nc = rng.integers(-2, 30, size=(r, k)).astype(np.int32)
+    npr = rng.integers(-1, 100, size=(r, k)).astype(np.int32)
+    nid = rng.integers(0, r + 1, size=(r, k)).astype(np.int32)
+    cu = rng.integers(-2, 30, size=(r,)).astype(np.int32)
+    pu = rng.integers(0, 100, size=(r,)).astype(np.int32)
+    ids = np.arange(r, dtype=np.int32)
+    args = tuple(map(jnp.asarray, (nc, npr, nid, cu, pu, ids)))
+    got = conflict_pallas(*args, interpret=True)
+    want = ref.conflict_ref(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [1, 5, 256, 1000, 4096])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5, 1.0])
+def test_compact_matches_ref(n, density):
+    rng = np.random.default_rng(n)
+    mask = jnp.asarray(rng.random(n) < density)
+    got_i, got_c = compact_pallas(mask, interpret=True)
+    want_i, want_c = ref.compact_ref(mask)
+    assert int(got_c) == int(want_c)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+@pytest.mark.parametrize("tile", [128, 256, 512])
+def test_compact_tile_sweep(tile):
+    rng = np.random.default_rng(tile)
+    mask = jnp.asarray(rng.random(3000) < 0.3)
+    got_i, got_c = compact_pallas(mask, tile=tile, interpret=True)
+    want_i, want_c = ref.compact_ref(mask)
+    assert int(got_c) == int(want_c)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=600))
+def test_compact_property(bits):
+    """Compaction invariants: sorted valid prefix = indices of set bits,
+    sentinel tail, count = popcount."""
+    mask = jnp.asarray(np.array(bits, dtype=bool))
+    items, count = compact_pallas(mask, interpret=True)
+    items = np.asarray(items)
+    c = int(count)
+    assert c == sum(bits)
+    np.testing.assert_array_equal(items[:c], np.nonzero(bits)[0])
+    assert (items[c:] == len(bits)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 20), st.data())
+def test_mex_property_hypothesis(r, k, data):
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    nc, base, extra = _rand_case(rng, r, k, 128)
+    got = mex_window_pallas(nc, base, extra, 128, interpret=True)
+    want = ref.mex_window_ref(nc, base, extra, 128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_jit_wrappers():
+    rng = np.random.default_rng(0)
+    nc, base, extra = _rand_case(rng, 64, 8, 128)
+    first, has = ops.mex_window(nc, base, extra, 128)
+    assert bool(jnp.all((first >= 0) == has))
+    mask = jnp.asarray(rng.random(512) < 0.4)
+    items, count = ops.compact(mask)
+    want_i, want_c = ref.compact_ref(mask)
+    np.testing.assert_array_equal(np.asarray(items), np.asarray(want_i))
+
+
+@pytest.mark.parametrize("r,k", [(1, 1), (17, 8), (100, 40), (256, 128)])
+def test_frontier_probe_matches_ref(r, k):
+    from repro.kernels.frontier import frontier_probe_pallas
+    rng = np.random.default_rng(r * 7 + k)
+    nbr = jnp.asarray(rng.random((r, k)) < 0.15)
+    unv = jnp.asarray(rng.random(r) < 0.5)
+    got = frontier_probe_pallas(nbr, unv, interpret=True)
+    want = ref.frontier_probe_ref(nbr, unv)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 60), st.integers(1, 16), st.data())
+def test_frontier_probe_property(r, k, data):
+    from repro.kernels.frontier import frontier_probe_pallas
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    nbr = jnp.asarray(rng.random((r, k)) < 0.3)
+    unv = jnp.asarray(rng.random(r) < 0.5)
+    got = np.asarray(frontier_probe_pallas(nbr, unv, interpret=True))
+    want = np.asarray(nbr).any(1) & np.asarray(unv)
+    np.testing.assert_array_equal(got, want)

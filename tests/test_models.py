@@ -1,0 +1,216 @@
+"""Model-layer correctness: attention parity, MoE, SO(3), GNN
+equivariance, DLRM embedding-bag semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import dlrm as dlrm_mod
+from repro.models import transformer as tfm
+from repro.models.attention import flash_attention
+from repro.models.gnn import common as gcommon
+from repro.models.gnn import egnn as egnn_mod
+from repro.models.gnn import equiformer_v2 as eqv2_mod
+from repro.models.gnn import schnet as schnet_mod
+from repro.models.gnn import so3
+from repro.models.moe import MoESettings, expert_compute, router_topk
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _naive_attn(q, k, v, causal=True):
+    b, sq, h, d = q.shape
+    _, sk, hk, _ = k.shape
+    g = h // hk
+    qg = q.reshape(b, sq, hk, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * d ** -0.5
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
+    return jnp.moveaxis(o, 3, 1).reshape(b, sq, h, d)
+
+
+@pytest.mark.parametrize("qc,kc", [(16, 16), (32, 64), (128, 128)])
+@pytest.mark.parametrize("hk", [1, 2, 4])
+def test_flash_attention_matches_naive(qc, kc, hk):
+    q = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 128, hk, 16))
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, 128, hk, 16))
+    got = flash_attention(q, k, v, q_chunk=qc, k_chunk=kc)
+    want = _naive_attn(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_grad_finite():
+    q = jax.random.normal(KEY, (1, 64, 2, 8))
+    g = jax.grad(lambda q: flash_attention(q, q, q, q_chunk=16,
+                                           k_chunk=16).sum())(q)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_router_topk_normalised():
+    x = jax.random.normal(KEY, (32, 16))
+    w = jax.random.normal(KEY, (16, 8))
+    gates, eids, aux = router_topk(x, w, 2)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+    assert eids.shape == (32, 2) and float(aux) > 0
+
+
+def test_expert_compute_equals_dense_reference():
+    """With capacity >= tokens, capacity-bucketed dispatch must equal the
+    dense per-token expert evaluation."""
+    t, d, f, e, k = 24, 8, 16, 4, 2
+    rng = np.random.default_rng(0)
+    xt = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    w_in = jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
+    w_gate = jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
+    w_out = jnp.asarray(rng.normal(size=(e, f, d)), jnp.float32)
+    gates = jnp.asarray(rng.random((t, k)), jnp.float32)
+    eids = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    got = expert_compute(xt, gates, eids, w_in, w_gate, w_out,
+                         e_offset=0, e_local=e, capacity=t * k)
+    want = jnp.zeros((t, d))
+    for ti in range(t):
+        for ki in range(k):
+            ei = int(eids[ti, ki])
+            h = xt[ti] @ w_in[ei]
+            g = xt[ti] @ w_gate[ei]
+            y = (jax.nn.silu(h) * g) @ w_out[ei]
+            want = want.at[ti].add(gates[ti, ki] * y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_expert_compute_capacity_drops():
+    """Over-capacity tokens are dropped, not mis-routed."""
+    t, d = 16, 4
+    xt = jnp.ones((t, d))
+    eids = jnp.zeros((t, 1), jnp.int32)     # everyone routes to expert 0
+    gates = jnp.ones((t, 1))
+    w_in = jnp.ones((1, d, 4))
+    w_out = jnp.ones((1, 4, d))
+    out = expert_compute(xt, gates, eids, w_in, w_in, w_out,
+                         e_offset=0, e_local=1, capacity=8)
+    nonzero = int((jnp.abs(out).sum(-1) > 0).sum())
+    assert nonzero == 8
+
+
+# --- SO(3) properties -------------------------------------------------------
+
+def _rand_rot(n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, 3, 3))
+    q, _ = np.linalg.qr(a)
+    q[:, :, 0] *= np.sign(np.linalg.det(q))[:, None]
+    return jnp.asarray(q)
+
+
+@pytest.mark.parametrize("l_max", [1, 2, 4, 6])
+def test_wigner_orthogonal_and_homomorphic(l_max):
+    r1, r2 = _rand_rot(4, 1), _rand_rot(4, 2)
+    d1 = so3.wigner_d_from_r(r1, l_max)
+    d2 = so3.wigner_d_from_r(r2, l_max)
+    d12 = so3.wigner_d_from_r(r1 @ r2, l_max)
+    s = (l_max + 1) ** 2
+    np.testing.assert_allclose(np.asarray(d1 @ jnp.swapaxes(d1, -1, -2)),
+                               np.broadcast_to(np.eye(s), (4, s, s)),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(d12), np.asarray(d1 @ d2),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("l_max", [2, 6])
+def test_sph_harm_rotation_property(l_max):
+    r = _rand_rot(6, 3)
+    v = np.random.default_rng(4).normal(size=(6, 3))
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    v = jnp.asarray(v)
+    y = so3.real_sph_harm(v, l_max)
+    y_rot = so3.real_sph_harm(jnp.einsum("bij,bj->bi", r, v), l_max)
+    d = so3.wigner_d_from_r(r, l_max)
+    np.testing.assert_allclose(np.asarray(y_rot),
+                               np.asarray(jnp.einsum("bij,bj->bi", d, y)),
+                               atol=2e-5)
+
+
+def test_rotation_to_z():
+    v = np.random.default_rng(5).normal(size=(16, 3))
+    v /= np.linalg.norm(v, axis=-1, keepdims=True)
+    v = np.concatenate([v, [[0, 0, 1]], [[0, 0, -1]]])
+    r = so3.rotation_to_z(jnp.asarray(v, jnp.float32))
+    z = np.einsum("bij,bj->bi", np.asarray(r), v)
+    np.testing.assert_allclose(z, np.broadcast_to([0, 0, 1], z.shape),
+                               atol=2e-6)
+    np.testing.assert_allclose(np.linalg.det(np.asarray(r)), 1.0, atol=1e-5)
+
+
+# --- GNN equivariance -------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def geo_batch():
+    return gcommon.random_graph_batch(KEY, 20, 80, 4, coords=True,
+                                      n_graphs=2)
+
+
+def _rot_batch(batch, q):
+    return batch._replace(coords=batch.coords @ q.T)
+
+
+def test_eqv2_rotation_invariance(geo_batch):
+    cfg = eqv2_mod.EqV2Config(n_layers=2, channels=16, l_max=3, m_max=2,
+                              n_heads=4, n_rbf=8, edge_chunk=40)
+    params, _ = eqv2_mod.init_params(cfg, KEY)
+    q = jnp.asarray(np.asarray(_rand_rot(1, 7))[0], jnp.float32)
+    e1 = eqv2_mod.forward(params, geo_batch, cfg)
+    e2 = eqv2_mod.forward(params, _rot_batch(geo_batch, q), cfg)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_egnn_equivariance(geo_batch):
+    cfg = egnn_mod.EGNNConfig(d_in=4, d_hidden=16, n_layers=2)
+    params, _ = egnn_mod.init_params(cfg, KEY)
+    q = jnp.asarray(np.asarray(_rand_rot(1, 8))[0], jnp.float32)
+    e1, x1 = egnn_mod.forward(params, geo_batch, cfg)
+    e2, x2 = egnn_mod.forward(params, _rot_batch(geo_batch, q), cfg)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(x1 @ q.T), np.asarray(x2),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_schnet_invariance(geo_batch):
+    cfg = schnet_mod.SchNetConfig(n_interactions=2, d_hidden=16, n_rbf=16)
+    params, _ = schnet_mod.init_params(cfg, KEY)
+    q = jnp.asarray(np.asarray(_rand_rot(1, 9))[0], jnp.float32)
+    e1 = schnet_mod.forward(params, geo_batch, cfg)
+    e2 = schnet_mod.forward(params, _rot_batch(geo_batch, q), cfg)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4,
+                               atol=1e-4)
+
+
+# --- DLRM -------------------------------------------------------------------
+
+def test_embedding_bag_modes():
+    table = jax.random.normal(KEY, (30, 6))
+    idx = jnp.asarray([0, 1, 2, 5, 9, 9], jnp.int32)
+    off = jnp.asarray([0, 3, 4], jnp.int32)
+    s = dlrm_mod.embedding_bag(table, idx, off, mode="sum")
+    m = dlrm_mod.embedding_bag(table, idx, off, mode="mean")
+    np.testing.assert_allclose(np.asarray(s[0]),
+                               np.asarray(table[0] + table[1] + table[2]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m[2]), np.asarray(table[9]),
+                               rtol=1e-6)
+
+
+def test_dlrm_interaction_count():
+    cfg = dlrm_mod.DLRMConfig(vocab_per_table=100, embed_dim=8,
+                              bot_mlp=(16, 8), top_mlp=(16, 1))
+    params, _ = dlrm_mod.init_params(cfg, KEY)
+    n_int = cfg.n_sparse + 1
+    d_inter = n_int * (n_int - 1) // 2 + cfg.embed_dim
+    assert params["top_w0"].shape[0] == d_inter

@@ -1,0 +1,94 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import color, jpl_color
+from repro.core.worklist import bucket_capacities, pick_bucket
+from repro.graphs import build_graph, validate_coloring
+from repro.graphs.sampler import sample_blocks
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 120), st.integers(0, 300), st.data())
+def test_coloring_always_valid_on_random_graphs(n, e, data):
+    """Any random multigraph (self loops included — removed by the
+    builder) gets a valid complete coloring from every engine mode."""
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=max(e, 1))
+    dst = rng.integers(0, n, size=max(e, 1))
+    g = build_graph(src, dst, n, name="h", ell_cap=32)
+    mode = data.draw(st.sampled_from(["hybrid", "data", "topology"]))
+    r = color(g, mode=mode, window=data.draw(st.sampled_from([32, "auto"])))
+    v = validate_coloring(g, r.colors)
+    assert v["conflicts"] == 0
+    assert v["uncolored"] == 0
+    # greedy bound: colors <= max_degree + 1
+    deg = np.asarray(g.arrays.degrees)
+    assert r.n_colors <= (deg.max() if len(deg) else 0) + 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 60), st.data())
+def test_jpl_valid_on_random_graphs(n, data):
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=3 * n)
+    dst = rng.integers(0, n, size=3 * n)
+    g = build_graph(src, dst, n, name="h")
+    r = jpl_color(g)
+    v = validate_coloring(g, r.colors)
+    assert v["conflicts"] == 0 and v["uncolored"] == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(16, 200_000), st.integers(2, 6))
+def test_bucket_ladder_properties(n, ratio):
+    caps = bucket_capacities(n, ratio=ratio)
+    assert caps[0] >= n
+    assert all(a > b for a, b in zip(caps, caps[1:]))
+    for c in (1, n // 3 + 1, n):
+        assert pick_bucket(caps, c) >= c
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 50), st.integers(1, 6), st.integers(1, 5), st.data())
+def test_sampler_returns_real_neighbours(n, f1, f2, data):
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=4 * n)
+    dst = rng.integers(0, n, size=4 * n)
+    g = build_graph(src, dst, n, name="h")
+    row_ptr = jnp.asarray(g.arrays.row_ptr)
+    col_idx = jnp.asarray(g.arrays.col_idx)
+    seeds = jnp.asarray(rng.integers(0, n, size=8), jnp.int32)
+    blocks = sample_blocks(jax.random.PRNGKey(seed), row_ptr, col_idx,
+                           seeds, (f1, f2))
+    rp, ci = np.asarray(row_ptr), np.asarray(col_idx)
+    hop1 = np.asarray(blocks.hops[0])
+    m1 = np.asarray(blocks.masks[0])
+    for i, s in enumerate(np.asarray(seeds)):
+        nbrs = set(ci[rp[s]:rp[s + 1]].tolist())
+        for j in range(f1):
+            if m1[i, j]:
+                assert int(hop1[i, j]) in nbrs
+            else:
+                assert int(hop1[i, j]) == int(s)   # isolated: self-fill
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=200),
+       st.integers(1, 8))
+def test_pipeline_host_slices_partition(batch_seed, n_hosts):
+    from repro.data.pipelines import TokenPipeline
+    gb = n_hosts * 4
+    p = TokenPipeline(vocab=97, seq_len=8, global_batch=gb,
+                      seed=batch_seed[0])
+    full = p.batch_at(3)
+    parts = [p.host_slice(3, h, n_hosts) for h in range(n_hosts)]
+    glued = np.concatenate([np.asarray(x["tokens"]) for x in parts])
+    np.testing.assert_array_equal(glued, np.asarray(full["tokens"]))
