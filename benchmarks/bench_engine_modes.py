@@ -1,0 +1,94 @@
+"""Engine-dispatch comparison -> ``BENCH_engine.json``.
+
+Times the coloring engines end-to-end (post-compile wall clock) per suite
+graph:
+
+  hybrid_host        host-loop Pipe, two-phase steps (the seed engine)
+  hybrid_host_fused  host-loop Pipe, fused one-gather steps
+  hybrid_outlined    device-resident Pipe (chunked lax.while_loop + fused)
+  dense / sparse     the paper's degenerate baselines
+
+The JSON records per-mode total seconds, iteration counts, host-dispatch
+counts and the per-dispatch TTI trace, so the perf trajectory of the hot
+path is tracked from PR 1 onward.
+
+  PYTHONPATH=src python -m benchmarks.bench_engine_modes --scale 0.05
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import csv_row, geomean
+from repro.core import color, color_outlined_hybrid
+from repro.graphs import make_suite, validate_coloring
+
+MODES = {
+    "hybrid_host": lambda g: color(g, mode="hybrid", outline=False,
+                                   collect_tti=True),
+    "hybrid_host_fused": lambda g: color(g, mode="hybrid", fused=True,
+                                         outline=False, collect_tti=True),
+    # fused=False so outlined-vs-host isolates dispatch outlining; the
+    # _fused row isolates step fusion (fused=None would pick per backend)
+    "hybrid_outlined": lambda g: color_outlined_hybrid(g, fused=False,
+                                                       collect_tti=True),
+    "hybrid_outlined_fused": lambda g: color_outlined_hybrid(
+        g, fused=True, collect_tti=True),
+    "dense": lambda g: color(g, mode="topology", outline=False,
+                             collect_tti=True),
+    "sparse": lambda g: color(g, mode="data", outline=False,
+                              collect_tti=True),
+}
+
+
+def bench(scale: float = 0.05, runs: int = 3, quiet: bool = False,
+          out_path: str | None = "BENCH_engine.json") -> dict:
+    suite = make_suite(scale=scale)
+    report: dict[str, dict] = {"scale": scale, "runs": runs, "graphs": {}}
+    for name, g in suite.items():
+        row: dict[str, dict] = {}
+        for mode, fn in MODES.items():
+            warm = fn(g)                      # compile + TTI capture
+            v = validate_coloring(g, warm.colors)
+            assert v["conflicts"] == 0 and v["uncolored"] == 0, (name, mode)
+            best = min(fn(g).total_seconds for _ in range(runs))
+            row[mode] = {
+                "seconds": best,
+                "iterations": warm.iterations,
+                "n_colors": warm.n_colors,
+                "host_dispatches": warm.host_dispatches,
+                "tti": [round(t, 6) for t in warm.tti],
+            }
+        report["graphs"][name] = row
+        if not quiet:
+            host = row["hybrid_host"]["seconds"]
+            outl = row["hybrid_outlined"]["seconds"]
+            print(csv_row(name,
+                          *(f"{row[m]['seconds'] * 1e3:.2f}" for m in MODES),
+                          f"outlined/host={host / max(outl, 1e-12):.2f}x"))
+    speedups = [r["hybrid_host"]["seconds"] / max(r["hybrid_outlined"]["seconds"], 1e-12)
+                for r in report["graphs"].values()]
+    report["geomean_outlined_vs_host"] = geomean(speedups)
+    if not quiet:
+        print(csv_row("GEOMEAN outlined vs host-loop",
+                      f"{report['geomean_outlined_vs_host']:.2f}x"))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        if not quiet:
+            print(f"# wrote {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    print(csv_row("graph", *MODES, "speedup"))
+    bench(args.scale, args.runs, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

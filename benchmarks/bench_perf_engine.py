@@ -14,10 +14,9 @@ Also reports the H-policy sweep on three representative graphs.
 from __future__ import annotations
 
 import argparse
-import os
 
 from benchmarks.common import csv_row, geomean
-from repro.core import color
+from repro.core import color, ipgc
 from repro.graphs import make_suite, validate_coloring
 
 
@@ -38,16 +37,16 @@ def bench(scale: float = 0.15, runs: int = 3, quiet=False):
     plains: dict[str, float] = {}
     for name, g in suite.items():
         for label, kw, force in variants:
-            os.environ["REPRO_IPGC_FORCE_HUB"] = "1" if force else "0"
+            ipgc.set_force_hub(force)
             results[label][name] = _time(g, runs=runs, mode="hybrid", **kw)
             r = color(g, mode="hybrid", **kw)
             v = validate_coloring(g, r.colors)
             assert v["conflicts"] == 0 and v["uncolored"] == 0
         # the paper's Plain baseline under the SAME final optimisations
-        os.environ["REPRO_IPGC_FORCE_HUB"] = "0"
+        ipgc.set_force_hub(False)
         plains[name] = _time(g, runs=runs, mode="data", window="auto",
                              bucket_ratio=2)
-    os.environ["REPRO_IPGC_FORCE_HUB"] = "0"
+    ipgc.set_force_hub(None)
 
     if not quiet:
         print(csv_row("graph", *(v[0] for v in variants), "plain_opt",

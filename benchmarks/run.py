@@ -48,6 +48,21 @@ def main() -> None:
                                                 quiet=True):
         print(f"table4/{name},,hybrid={h:.0f} jpl={j:.0f}")
 
+    print("# --- engine dispatch modes (host-loop vs outlined) ---")
+    from benchmarks import bench_engine_modes
+    em = bench_engine_modes.bench(scale=scale, runs=2, quiet=True,
+                                  out_path="BENCH_engine.json")
+    for name, row in em["graphs"].items():
+        host = row["hybrid_host"]["seconds"]
+        outl = row["hybrid_outlined"]["seconds"]
+        print(f"engine/{name},{outl * 1e6:.0f},host={host * 1e3:.1f}ms "
+              f"outlined={outl * 1e3:.1f}ms "
+              f"dispatches={row['hybrid_outlined']['host_dispatches']}"
+              f"/{row['hybrid_host']['host_dispatches']} "
+              f"speedup={host / max(outl, 1e-12):.2f}x")
+    print(f"engine/geomean_outlined_vs_host,,"
+          f"{em['geomean_outlined_vs_host']:.2f}x (BENCH_engine.json)")
+
     print("# --- paper future-work: hybrid BFS on the same substrate ---")
     from benchmarks import bench_bfs_hybrid
     for name, td, bu, hy, sp, trace in bench_bfs_hybrid.bench(

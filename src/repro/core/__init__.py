@@ -1,6 +1,7 @@
 """The paper's primary contribution: hybrid (topology+data-driven) worklist
 scheduling with a persistent worklist, applied to IPGC graph coloring."""
-from repro.core.engine import ColoringResult, color  # noqa: F401
+from repro.core.engine import (ColoringResult, color,  # noqa: F401
+                               color_outlined, color_outlined_hybrid)
 from repro.core.baselines import jpl_color, vb_color  # noqa: F401
 from repro.core.worklist import Worklist, full_worklist, bucket_capacities  # noqa: F401
 from repro.core import ipgc  # noqa: F401

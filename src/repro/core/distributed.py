@@ -49,7 +49,7 @@ def make_dist_dense_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
         mult = 1
         for ax in reversed(node_axes):
             idx = idx + jax.lax.axis_index(ax) * mult
-            mult = mult * jax.lax.axis_size(ax)
+            mult = mult * mesh.shape[ax]  # static (lax.axis_size: jax>=0.6)
         blk = ell_l.shape[0]
         row_ids = idx * blk + jnp.arange(blk, dtype=jnp.int32)
 

@@ -1,16 +1,27 @@
 """Hybrid coloring engine — the host-side analogue of IrGL's ``Pipe``.
 
-The device never sees dynamic shapes; the host reads back one scalar
-(``count``) per iteration — exactly the information IrGL's Pipe uses for its
-worklist-size check — picks dense vs sparse (the paper's H policy) and a
-capacity bucket, and dispatches the jitted step. The worklist state is
-maintained by *both* steps (the paper's contribution), so there is no
-rebuild cost at a switch: we only ever *slice* the already-compacted items
-array down to a smaller bucket.
+Two dispatch regimes (DESIGN.md §4):
+
+* ``color`` — the host-loop Pipe: the device never sees dynamic shapes; the
+  host reads back one scalar (``count``) per iteration — exactly the
+  information IrGL's Pipe uses for its worklist-size check — picks dense vs
+  sparse (the paper's H policy) and a capacity bucket, and dispatches the
+  jitted step.
+* ``color_outlined_hybrid`` — the device-resident Pipe: iterations run as
+  chunks of ``lax.while_loop`` trips in which each trip picks dense vs
+  sparse on-device (``lax.cond`` on ``count`` against the policy's traced
+  threshold) at the current static capacity bucket. The host re-enters only
+  when the count crosses a bucket boundary or the loop drains, collapsing
+  ~O(iterations) host round-trips to ~O(#buckets).
+
+The worklist state is maintained by *both* steps (the paper's
+contribution), so there is no rebuild cost at a switch: we only ever
+*slice* the already-compacted items array down to a smaller bucket.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import jax
@@ -18,10 +29,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ipgc
-from repro.core.policy import AutoTuned, Policy, Timer, make_policy
-from repro.core.worklist import (Worklist, bucket_capacities, full_worklist,
-                                 pick_bucket)
+from repro.core.policy import (AutoTuned, Policy, Timer, device_threshold,
+                               make_policy)
+from repro.core.worklist import (Worklist, bucket_capacities,
+                                 chunk_lower_bounds, full_worklist,
+                                 pick_bucket, resize_items)
 from repro.graphs.csr import Graph
+
+# Outlining as the default fast path is gated behind this env flag (read
+# once at import): with REPRO_OUTLINE_HYBRID=1, ``color`` transparently
+# routes through ``color_outlined_hybrid``.
+_OUTLINE_DEFAULT = os.environ.get("REPRO_OUTLINE_HYBRID", "0") == "1"
 
 
 @dataclasses.dataclass
@@ -30,9 +48,12 @@ class ColoringResult:
     n_colors: int
     iterations: int
     mode_trace: str             # 'D'/'S' per iteration
-    counts: list[int]           # worklist size per iteration (pre-step)
-    tti: list[float]            # wall seconds per iteration
+    counts: list[int]           # worklist size per host dispatch: one entry
+    #                             per iteration for the host loop, one per
+    #                             while_loop chunk for the outlined engine
+    tti: list[float]            # wall seconds, same granularity as counts
     total_seconds: float
+    host_dispatches: int = 0    # device-program launches the host issued
 
 
 def adaptive_window(g: Graph, *, lo: int = 32, hi: int = 128) -> int:
@@ -41,7 +62,6 @@ def adaptive_window(g: Graph, *, lo: int = 32, hi: int = 128) -> int:
     *typical* degree, so a window ~2x the median degree covers almost all
     assignments in one pass while hub nodes advance their base. Cuts the
     O(C*W) per-iteration mex term up to 4x on low-degree graphs."""
-    import numpy as np
     med = int(np.median(np.asarray(g.arrays.degrees)))
     return int(min(max(-(-2 * (med + 1) // 32) * 32, lo), hi))
 
@@ -59,7 +79,16 @@ def color(
     priority: str = "hash",
     policy: Policy | None = None,
     collect_tti: bool = False,
+    fused: bool = False,          # one-gather fused assign/resolve steps
+    outline: bool | None = None,  # None -> REPRO_OUTLINE_HYBRID env default
 ) -> ColoringResult:
+    if outline is None:
+        outline = _OUTLINE_DEFAULT
+    if outline:
+        return color_outlined_hybrid(
+            g, mode=mode, h=h, window=window, impl=impl,
+            bucket_ratio=bucket_ratio, max_iter=max_iter, priority=priority,
+            policy=policy, collect_tti=collect_tti, fused=fused)
     if window == "auto":
         assert isinstance(g, Graph)
         window = adaptive_window(g)
@@ -67,6 +96,8 @@ def color(
     n = ig.n_nodes
     pol = policy or make_policy(mode, h)
     caps = bucket_capacities(n, ratio=bucket_ratio)
+    force_hub = ipgc.force_hub_enabled()
+    dense_fn, sparse_fn = ipgc.step_fns(fused)
 
     colors = ipgc.init_colors(n)
     base = jnp.zeros((n,), dtype=jnp.int32)
@@ -83,15 +114,16 @@ def color(
         counts.append(count)
         with Timer() as t:
             if use_dense:
-                colors, base, wl = ipgc.dense_step(
-                    ig, colors, base, wl, window=window, impl=impl)
+                colors, base, wl = dense_fn(
+                    ig, colors, base, wl, window=window, impl=impl,
+                    force_hub=force_hub)
             else:
                 cap = pick_bucket(caps, count)
                 if wl.capacity > cap:
-                    wl = Worklist(mask=wl.mask, items=wl.items[:cap],
-                                  count=wl.count)
-                colors, base, wl = ipgc.sparse_step(
-                    ig, colors, base, wl, window=window, impl=impl)
+                    wl = resize_items(wl, cap, n)
+                colors, base, wl = sparse_fn(
+                    ig, colors, base, wl, window=window, impl=impl,
+                    force_hub=force_hub)
             count = int(wl.count)  # the Pipe's single scalar read-back
         trace.append("D" if use_dense else "S")
         if collect_tti:
@@ -105,7 +137,162 @@ def color(
     n_colors = int(final.max()) + 1 if final.size else 0
     return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
                           mode_trace="".join(trace), counts=counts, tti=tti,
-                          total_seconds=total)
+                          total_seconds=total, host_dispatches=it)
+
+
+# ---------------------------------------------------------------------------
+# device-resident hybrid Pipe (iteration outlining with bucket exits)
+# ---------------------------------------------------------------------------
+
+def _chunk_impl(ig, colors, base, wl, thresh, low, max_iter, it0, nd0, ns0,
+                *, window: int, impl: str, fused: bool, force_hub: bool,
+                branch: str):
+    """One device program: while_loop over hybrid iterations at a static
+    capacity bucket. Each trip picks dense vs sparse via ``lax.cond`` on the
+    on-device count; the loop exits when the count crosses ``low`` (the next
+    bucket boundary) so the host can re-dispatch at a smaller static shape.
+
+    ``branch`` is a host-side specialisation: when the whole chunk provably
+    runs one mode (its count range ``(low, cap]`` sits entirely on one side
+    of the threshold — true for every chunk except the one containing the H
+    flip), the conditional is compiled out so XLA sees a straight-line loop
+    body.
+    """
+    dense_fn = ipgc.fused_dense_step_impl if fused else ipgc.dense_step_impl
+    sparse_fn = (ipgc.fused_sparse_step_impl if fused
+                 else ipgc.sparse_step_impl)
+    step_kw = dict(window=window, impl=impl, force_hub=force_hub)
+
+    def cond(state):
+        _, _, wl, it, _, _ = state
+        return (wl.count > 0) & (it < max_iter) & (wl.count > low)
+
+    def body(state):
+        colors, base, wl, it, nd, ns = state
+        if branch == "dense":
+            use_dense = jnp.asarray(True)
+            colors, base, wl = dense_fn(ig, colors, base, wl, **step_kw)
+        elif branch == "sparse":
+            use_dense = jnp.asarray(False)
+            colors, base, wl = sparse_fn(ig, colors, base, wl, **step_kw)
+        else:
+            use_dense = wl.count > thresh
+            colors, base, wl = jax.lax.cond(
+                use_dense,
+                lambda c, b, w: dense_fn(ig, c, b, w, **step_kw),
+                lambda c, b, w: sparse_fn(ig, c, b, w, **step_kw),
+                colors, base, wl)
+        d = use_dense.astype(jnp.int32)
+        return colors, base, wl, it + 1, nd + d, ns + (1 - d)
+
+    return jax.lax.while_loop(
+        cond, body, (colors, base, wl, it0, nd0, ns0))
+
+
+_hybrid_chunk = jax.jit(
+    _chunk_impl,
+    static_argnames=("window", "impl", "fused", "force_hub", "branch"))
+
+
+def color_outlined_hybrid(
+    g: Graph | ipgc.IPGCGraph,
+    *,
+    mode: str = "hybrid",
+    h: float = 0.6,
+    window: int | str = "auto",
+    impl: str = "jnp",
+    bucket_ratio: int = 2,
+    max_iter: int = 10_000,
+    priority: str = "hash",
+    policy: Policy | None = None,
+    collect_tti: bool = False,
+    fused: bool | None = None,
+) -> ColoringResult:
+    """Device-resident hybrid Pipe: ~O(#buckets) host dispatches total.
+
+    Iteration-for-iteration equivalent to the host-loop ``color`` with the
+    same ``fused`` setting and a fixed-H policy: within a chunk at bucket
+    ``caps[i]`` the count stays in ``(caps[i+1], caps[i]]``, so the host
+    loop would have picked the same bucket, and the on-device
+    ``count > threshold`` cond is the same comparison the host policy makes.
+    The H flip therefore happens *on-device* mid-chunk; the host re-enters
+    only to re-dispatch at the next static capacity (``tti``/``counts`` are
+    recorded per chunk, and ``mode_trace`` is reconstructed per chunk from
+    the on-device D/S trip counters — exact for monotone policies).
+
+    AutoTuned policies are supported via their chunked observe hook: the
+    threshold is refreshed between chunks, not between iterations.
+
+    ``fused=None`` resolves per backend: the one-gather fused steps win
+    where neighbour-gather bandwidth dominates (TPU), while their deferred
+    resolve costs a few extra iterations — a bad trade on the CPU jnp path,
+    where the forbidden-bitmap scatter dominates (DESIGN.md §5).
+    """
+    if fused is None:
+        fused = jax.default_backend() == "tpu"
+    if window == "auto":
+        assert isinstance(g, Graph)
+        window = adaptive_window(g)
+    ig = ipgc.prepare(g, priority=priority) if isinstance(g, Graph) else g
+    n = ig.n_nodes
+    pol = policy or make_policy(mode, h)
+    caps = bucket_capacities(n, ratio=bucket_ratio)
+    lows = chunk_lower_bounds(caps)
+    force_hub = ipgc.force_hub_enabled()
+
+    colors = ipgc.init_colors(n)
+    base = jnp.zeros((n,), dtype=jnp.int32)
+    wl = resize_items(full_worklist(n), caps[0], n)
+    count = n
+
+    trace: list[str] = []
+    counts: list[int] = []
+    tti: list[float] = []
+    t_start = time.perf_counter()
+    it = 0
+    bi = 0
+    dispatches = 0
+    while count > 0 and it < max_iter:
+        while bi < len(caps) - 1 and caps[bi + 1] >= count:
+            bi += 1
+        wl = resize_items(wl, caps[bi], n)
+        thresh = device_threshold(pol, n)
+        # chunk counts stay in (lows[bi], caps[bi]]: compile out the
+        # dense/sparse cond unless the H flip lands inside this chunk
+        if lows[bi] >= thresh:
+            branch = "dense"
+        elif caps[bi] <= thresh:
+            branch = "sparse"
+        else:
+            branch = "cond"
+        counts.append(count)
+        dispatches += 1
+        with Timer() as t:
+            colors, base, wl, it_dev, nd, ns = _hybrid_chunk(
+                ig, colors, base, wl,
+                jnp.asarray(thresh, jnp.int32),
+                jnp.asarray(lows[bi], jnp.int32),
+                jnp.asarray(max_iter, jnp.int32),
+                jnp.asarray(it, jnp.int32),
+                jnp.asarray(0, jnp.int32),
+                jnp.asarray(0, jnp.int32),
+                window=window, impl=impl, fused=fused, force_hub=force_hub,
+                branch=branch)
+            count = int(wl.count)  # the chunk's single scalar read-back
+        nd, ns, new_it = int(nd), int(ns), int(it_dev)
+        trace.append("D" * nd + "S" * ns)
+        if collect_tti:
+            tti.append(t.seconds)
+        if isinstance(pol, AutoTuned):
+            pol.observe_chunk(nd, ns, (counts[-1] + count) / 2, t.seconds)
+        it = new_it
+
+    total = time.perf_counter() - t_start
+    final = np.asarray(colors[:n])
+    n_colors = int(final.max()) + 1 if final.size else 0
+    return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
+                          mode_trace="".join(trace), counts=counts, tti=tti,
+                          total_seconds=total, host_dispatches=dispatches)
 
 
 def color_outlined(
@@ -116,17 +303,14 @@ def color_outlined(
     max_iter: int = 10_000,
     priority: str = "hash",
 ) -> ColoringResult:
-    """IrGL "iteration outlining": the whole Pipe runs as ONE device
-    program (``lax.while_loop`` over dense steps) — zero host round-trips.
+    """IrGL "iteration outlining", dense-only degenerate form: the whole
+    Pipe runs as ONE device program (``lax.while_loop`` over dense steps) —
+    zero intermediate host round-trips, no capacity bucketing, no H policy.
 
-    This is the topology-driven engine with the loop outlined; the hybrid
-    engine cannot be fully outlined because capacity bucketing needs the
-    host to re-dispatch at a different static shape (exactly the one
-    scalar read IrGL's Pipe performs). Useful when the graph is small or
-    host-device latency dominates (many tiny iterations).
+    Kept as the minimal reference for the outlining idiom; the general
+    engine is ``color_outlined_hybrid``, which adds the on-device H policy
+    and exits to the host only at capacity-bucket boundaries.
     """
-    import jax
-
     if window == "auto":
         window = adaptive_window(g)
     ig = ipgc.prepare(g, priority=priority)
@@ -151,4 +335,5 @@ def color_outlined(
     iters = int(it)
     return ColoringResult(colors=colors, n_colors=int(colors.max()) + 1,
                           iterations=iters, mode_trace="O" * iters,
-                          counts=[], tti=[], total_seconds=total)
+                          counts=[], tti=[], total_seconds=total,
+                          host_dispatches=1)

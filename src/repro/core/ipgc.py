@@ -29,7 +29,7 @@ phase stays O(C·K + T + C·W) — see DESIGN.md §2.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import os
 
 import jax
 import jax.numpy as jnp
@@ -90,9 +90,50 @@ def prepare(g: Graph, *, priority: str = "hash") -> IPGCGraph:
     )
 
 
-def _force_hub() -> bool:
-    import os
-    return os.environ.get("REPRO_IPGC_FORCE_HUB", "0") == "1"
+# Read the env var ONCE at import (it used to be re-read on every trace);
+# benchmarks that A/B the hub side-channel use set_force_hub() instead of
+# mutating os.environ, which also keeps the jit cache honest: the engine
+# passes the resolved value down as a *static* step argument.
+_FORCE_HUB_ENV = os.environ.get("REPRO_IPGC_FORCE_HUB", "0") == "1"
+_force_hub_override: bool | None = None
+
+
+def set_force_hub(value: bool | None) -> None:
+    """Override (or with ``None`` reset) the hub side-channel forcing."""
+    global _force_hub_override
+    _force_hub_override = value
+
+
+def force_hub_enabled() -> bool:
+    return _FORCE_HUB_ENV if _force_hub_override is None else _force_hub_override
+
+
+def _force_hub() -> bool:  # kept for back-compat with direct callers
+    return force_hub_enabled()
+
+
+def _has_hubs(ig: IPGCGraph, force_hub: bool | None) -> bool:
+    if force_hub is None:
+        force_hub = force_hub_enabled()
+    return ig.n_hub > 0 or force_hub
+
+
+# --- gather instrumentation (trace-time) -----------------------------------
+# Every ELL-shaped gather of the *mutable* colors array goes through
+# ``_gather_neighbor_colors`` so tests can assert how many such gathers a
+# step performs (the fused step's contract is exactly one; the two-phase
+# steps perform two). Counters increment at trace time — inspect them by
+# tracing the raw ``*_impl`` functions with ``jax.eval_shape``.
+GATHER_COUNTS = {"neighbor_colors": 0}
+
+
+def reset_gather_counts() -> None:
+    GATHER_COUNTS["neighbor_colors"] = 0
+
+
+def _gather_neighbor_colors(colors: jax.Array, rows: jax.Array) -> jax.Array:
+    GATHER_COUNTS["neighbor_colors"] += 1
+    return colors[rows]
 
 
 def init_colors(n_nodes: int) -> jax.Array:
@@ -179,23 +220,30 @@ def _mex_rows(ig: IPGCGraph, nc: jax.Array, base_rows: jax.Array,
 # conflict helpers
 # ---------------------------------------------------------------------------
 
+def _conflict_rows(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
+                   cu: jax.Array, pu: jax.Array, ids: jax.Array) -> jax.Array:
+    """Row u conflicts iff some neighbour v has the same color and a higher
+    (priority, id) pair — THE tie-break predicate (jnp reference; the
+    Pallas kernels and kernels/ref.py mirror it)."""
+    same = (nc == cu[:, None]) & (cu >= 0)[:, None]
+    higher = (npr > pu[:, None]) | ((npr == pu[:, None]) &
+                                    (nbr_ids > ids[:, None]))
+    return (same & higher).any(axis=1)
+
+
 def _lose_rows(ig: IPGCGraph, ell_rows: jax.Array, row_ids: jax.Array,
                colors: jax.Array, newly: jax.Array, impl: str) -> jax.Array:
-    """Row u loses iff some neighbour v has the same color and a higher
-    (priority, id). Only newly-colored rows can conflict (mex excluded all
-    surviving older colors)."""
+    """Row u loses iff it conflicts (see ``_conflict_rows``). Only
+    newly-colored rows can conflict (mex excluded all surviving older
+    colors)."""
     cu = colors[row_ids]
     pu = ig.priority[row_ids]
+    nc = _gather_neighbor_colors(colors, ell_rows)
+    npr = ig.priority[ell_rows]
     if impl == "pallas":
         from repro.kernels import ops as kops
-        nc = colors[ell_rows]
-        npr = ig.priority[ell_rows]
         return kops.conflict(nc, npr, ell_rows, cu, pu, row_ids) & newly
-    nc = colors[ell_rows]
-    npr = ig.priority[ell_rows]
-    same = (nc == cu[:, None]) & (cu >= 0)[:, None]
-    higher = (npr > pu[:, None]) | ((npr == pu[:, None]) & (ell_rows > row_ids[:, None]))
-    return (same & higher).any(axis=1) & newly
+    return _conflict_rows(nc, npr, ell_rows, cu, pu, row_ids) & newly
 
 
 def _hub_lose(ig: IPGCGraph, colors: jax.Array, newly_full: jax.Array) -> jax.Array:
@@ -215,19 +263,19 @@ def _hub_lose(ig: IPGCGraph, colors: jax.Array, newly_full: jax.Array) -> jax.Ar
 # dense (topology-driven) step — sweeps all N rows, maintains the worklist
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("window", "impl"))
-def dense_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
-               wl: Worklist, *, window: int = 128, impl: str = "jnp"
-               ) -> tuple[jax.Array, jax.Array, Worklist]:
+def dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+                    wl: Worklist, *, window: int = 128, impl: str = "jnp",
+                    force_hub: bool | None = None
+                    ) -> tuple[jax.Array, jax.Array, Worklist]:
     n = ig.n_nodes
     active = wl.mask
     row_ids = jnp.arange(n, dtype=jnp.int32)
     # static: hub side-channel compiled out entirely for regular graphs
-    # (REPRO_IPGC_FORCE_HUB=1 restores the unconditional path for A/B runs)
-    has_hubs = ig.n_hub > 0 or _force_hub()
+    # (force_hub restores the unconditional path for A/B runs)
+    has_hubs = _has_hubs(ig, force_hub)
 
     # --- assign (speculative windowed mex) ---
-    nc = colors[ig.ell_idx]
+    nc = _gather_neighbor_colors(colors, ig.ell_idx)
     if has_hubs:
         hub_forb = _hub_forbidden(ig, colors, base, window)      # (nh+1, W)
         extra = hub_forb[jnp.minimum(ig.hub_slot, ig.n_hub)]     # (N, W)
@@ -255,19 +303,19 @@ def dense_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
 # sparse (data-driven) step — gathers C worklist rows, O(C*K + T + C*W)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("window", "impl"))
-def sparse_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
-                wl: Worklist, *, window: int = 128, impl: str = "jnp"
-                ) -> tuple[jax.Array, jax.Array, Worklist]:
+def sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+                     wl: Worklist, *, window: int = 128, impl: str = "jnp",
+                     force_hub: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array, Worklist]:
     n = ig.n_nodes
     items = wl.items
     valid = items < n
     safe = jnp.where(valid, items, 0)
 
     # --- assign ---
-    has_hubs = ig.n_hub > 0 or _force_hub()
+    has_hubs = _has_hubs(ig, force_hub)
     ell_rows = jnp.where(valid[:, None], ig.ell_idx[safe], n)    # (C, K)
-    nc = colors[ell_rows]
+    nc = _gather_neighbor_colors(colors, ell_rows)
     base_rows = base[safe]
     if has_hubs:
         hub_forb = _hub_forbidden(ig, colors, base, window)
@@ -279,7 +327,10 @@ def sparse_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
     colors2 = colors.at[jnp.where(valid, items, n)].set(
         jnp.where(valid, new_c, PAD_COLOR))
     colors2 = colors2.at[n].set(PAD_COLOR)
-    base2 = base.at[safe].set(jnp.where(valid, new_base_rows, base[safe]))
+    # padding rows scatter to the dropped index n — routing them to row 0
+    # would let their stale value clobber node 0's real update
+    base2 = base.at[jnp.where(valid, items, n)].set(new_base_rows,
+                                                    mode="drop")
 
     # --- resolve ---
     lose = _lose_rows(ig, ell_rows, jnp.where(valid, items, n), colors2,
@@ -296,5 +347,157 @@ def sparse_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
     # --- maintain the worklist in O(C) ---
     still = lose | (valid & ~newly)
     new_items, count = compact_items(items, still, n)
-    mask = wl.mask.at[safe].set(jnp.where(valid, still, wl.mask[safe]))
+    mask = wl.mask.at[jnp.where(valid, items, n)].set(still, mode="drop")
     return colors3, base2, Worklist(mask=mask, items=new_items, count=count)
+
+
+# ---------------------------------------------------------------------------
+# fused assign+resolve steps — ONE neighbour-color gather per iteration
+# ---------------------------------------------------------------------------
+# The two-phase steps above gather ``colors[ell_idx]`` twice per iteration
+# (once pre-assign for the mex bitmap, once post-assign for the conflict
+# check). The fused steps pipeline the phases instead (DESIGN.md §5): the
+# resolve of the assignments speculated in iteration t-1 and the assign of
+# iteration t share a single snapshot gather.
+#
+# Per active row u (active = in the worklist = not yet *confirmed*):
+#   pending(u)  := active(u) and colors[u] >= 0   (speculated last step)
+#   1. resolve: u loses iff pending and some neighbour holds the same color
+#      with a higher (priority, id) — by construction a same-color
+#      neighbour can only be same-round pending, so the snapshot is exact.
+#   2. assign: rows that lost or were still uncolored re-run the windowed
+#      mex over the SAME gathered tile. A neighbour that lost *this* step
+#      keeps its doomed color forbidden in the snapshot — a safe
+#      over-approximation (validity is never violated; at worst a color
+#      index is skipped).
+#   3. worklist: confirmed rows (pending and did not lose) leave; newly
+#      speculated and window-exhausted rows stay.
+#
+# Both fused phases maintain the full dual worklist state, so the hybrid
+# engine can still switch dense<->sparse for free mid-run.
+
+def _fused_rows(ig: IPGCGraph, nc: jax.Array, npr: jax.Array,
+                nbr_ids: jax.Array, base_rows: jax.Array, cu: jax.Array,
+                pu: jax.Array, ids: jax.Array, pending: jax.Array,
+                extra_forb: jax.Array | None, window: int, impl: str
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared row-wise core: (lose_ell, first, has) from one gathered tile."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        if extra_forb is None:
+            extra_forb = jnp.zeros((nc.shape[0], window), bool)
+        lose, first = kops.fused_step(nc, npr, nbr_ids, base_rows, cu, pu,
+                                      ids, pending, extra_forb, window)
+        return lose, first, first >= 0
+    lose = _conflict_rows(nc, npr, nbr_ids, cu, pu, ids) & pending
+    forb = _ell_forbidden(nc, base_rows, window)
+    if extra_forb is not None:
+        forb = forb | extra_forb
+    free = ~forb
+    has = free.any(axis=1)
+    first = jnp.argmax(free, axis=1).astype(jnp.int32)
+    return lose, first, has
+
+
+def fused_dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+                          wl: Worklist, *, window: int = 128,
+                          impl: str = "jnp", force_hub: bool | None = None
+                          ) -> tuple[jax.Array, jax.Array, Worklist]:
+    n = ig.n_nodes
+    active = wl.mask
+    row_ids = jnp.arange(n, dtype=jnp.int32)
+    has_hubs = _has_hubs(ig, force_hub)
+
+    cu = colors[:n]
+    pu = ig.priority[:n]
+    pending = active & (cu >= 0)
+    nc = _gather_neighbor_colors(colors, ig.ell_idx)   # the ONE gather
+    npr = ig.priority[ig.ell_idx]
+
+    if has_hubs:
+        hub_slot = jnp.minimum(ig.hub_slot, ig.n_hub)
+        extra = _hub_forbidden(ig, colors, base, window)[hub_slot]
+        pending_full = jnp.concatenate([pending, jnp.zeros((1,), bool)])
+        hub_lose = _hub_lose(ig, colors, pending_full)[hub_slot]
+    else:
+        extra = None
+        hub_lose = None
+
+    lose, first, has = _fused_rows(ig, nc, npr, ig.ell_idx, base, cu, pu,
+                                   row_ids, pending, extra, window, impl)
+    if hub_lose is not None:
+        lose = lose | (hub_lose & pending)
+    need = lose | (active & (cu < 0))                  # rows to (re)color
+    new_c = jnp.where(need & has, base + first,
+                      jnp.where(lose, NO_COLOR, cu))
+    new_base = jnp.where(need & ~has, base + window, base)
+    colors2 = colors.at[:n].set(new_c)
+
+    still = need                                       # confirmed rows leave
+    items, count = compact_mask(still, wl.items.shape[0], n)
+    return colors2, new_base, Worklist(mask=still, items=items, count=count)
+
+
+def fused_sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+                           wl: Worklist, *, window: int = 128,
+                           impl: str = "jnp", force_hub: bool | None = None
+                           ) -> tuple[jax.Array, jax.Array, Worklist]:
+    n = ig.n_nodes
+    items = wl.items
+    valid = items < n
+    safe = jnp.where(valid, items, 0)
+    ids = jnp.where(valid, items, n)
+    has_hubs = _has_hubs(ig, force_hub)
+
+    ell_rows = jnp.where(valid[:, None], ig.ell_idx[safe], n)    # (C, K)
+    nc = _gather_neighbor_colors(colors, ell_rows)     # the ONE gather
+    npr = ig.priority[ell_rows]
+    cu = jnp.where(valid, colors[safe], PAD_COLOR)
+    pu = ig.priority[ids]
+    base_rows = base[safe]
+    pending = valid & (cu >= 0)
+
+    if has_hubs:
+        hub_slot = jnp.minimum(ig.hub_slot[safe], ig.n_hub)
+        extra = _hub_forbidden(ig, colors, base, window)[hub_slot]
+        pending_full = jnp.zeros((n + 1,), bool).at[
+            jnp.where(pending, items, n)].set(pending, mode="drop")[: n + 1]
+        hub_lose = _hub_lose(ig, colors, pending_full)[hub_slot] & valid
+    else:
+        extra = None
+        hub_lose = None
+
+    lose, first, has = _fused_rows(ig, nc, npr, ell_rows, base_rows, cu, pu,
+                                   ids, pending, extra, window, impl)
+    if hub_lose is not None:
+        lose = lose | (hub_lose & pending)
+    need = lose | (valid & (cu < 0))
+    new_c = jnp.where(need & has, base_rows + first,
+                      jnp.where(lose, NO_COLOR, cu))
+    new_base_rows = jnp.where(need & ~has, base_rows + window, base_rows)
+
+    colors2 = colors.at[jnp.where(valid, items, n)].set(
+        jnp.where(valid, new_c, PAD_COLOR))
+    colors2 = colors2.at[n].set(PAD_COLOR)
+    # padding rows scatter to the dropped index n (see sparse_step_impl)
+    base2 = base.at[jnp.where(valid, items, n)].set(new_base_rows,
+                                                    mode="drop")
+
+    still = need
+    new_items, count = compact_items(items, still, n)
+    mask = wl.mask.at[jnp.where(valid, items, n)].set(still, mode="drop")
+    return colors2, base2, Worklist(mask=mask, items=new_items, count=count)
+
+
+# jitted public entry points (``*_impl`` stay traceable for instrumentation)
+_STEP_STATICS = ("window", "impl", "force_hub")
+dense_step = jax.jit(dense_step_impl, static_argnames=_STEP_STATICS)
+sparse_step = jax.jit(sparse_step_impl, static_argnames=_STEP_STATICS)
+fused_dense_step = jax.jit(fused_dense_step_impl, static_argnames=_STEP_STATICS)
+fused_sparse_step = jax.jit(fused_sparse_step_impl, static_argnames=_STEP_STATICS)
+
+
+def step_fns(fused: bool):
+    """(dense, sparse) jitted step pair for the requested semantics."""
+    return ((fused_dense_step, fused_sparse_step) if fused
+            else (dense_step, sparse_step))

@@ -5,6 +5,15 @@ empirically, ~0.6 on a Quadro P5000). We provide the paper's fixed-H policy,
 the two degenerate policies (the baselines), and an auto-tuned policy that
 estimates the crossover from two timed probes — the "analytical H" the
 paper lists as future work.
+
+Every built-in policy also has a *device-side form*: an int32 count
+threshold such that ``count > threshold`` means dense. The outlined hybrid
+engine (engine.color_outlined_hybrid) feeds this threshold into the
+on-device ``lax.cond`` so the H decision never re-enters Python;
+``device_threshold`` derives it for arbitrary monotone callables by
+bisection. AutoTuned refreshes its threshold between chunks via the
+``observe_chunk`` hook (it cannot observe per-iteration timings when the
+iterations run inside one ``lax.while_loop`` dispatch).
 """
 from __future__ import annotations
 
@@ -16,18 +25,68 @@ from typing import Callable
 Policy = Callable[[int, int], bool]
 
 
+@dataclasses.dataclass(frozen=True)
+class FixedH:
+    """The paper's policy: dense while count > h * n."""
+
+    h: float = 0.6
+
+    def __call__(self, count: int, n: int) -> bool:
+        return count > self.h * n
+
+    def threshold(self, n: int) -> int:
+        # count is integral, so count > h*n  <=>  count > floor(h*n)
+        return int(self.h * n)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysDense:
+    def __call__(self, count: int, n: int) -> bool:
+        return True
+
+    def threshold(self, n: int) -> int:
+        return -1
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysSparse:
+    def __call__(self, count: int, n: int) -> bool:
+        return False
+
+    def threshold(self, n: int) -> int:
+        return n  # count <= n always, so count > n is never true
+
+
 def fixed_h(h: float = 0.6) -> Policy:
-    def pol(count: int, n: int) -> bool:
-        return count > h * n
-    return pol
+    return FixedH(h)
 
 
 def always_dense() -> Policy:
-    return lambda count, n: True
+    return AlwaysDense()
 
 
 def always_sparse() -> Policy:
-    return lambda count, n: False
+    return AlwaysSparse()
+
+
+def device_threshold(pol: Policy, n: int) -> int:
+    """Int threshold t with ``pol(count, n) == (count > t)`` for monotone
+    policies. Built-ins answer directly; closures are bisected."""
+    thr = getattr(pol, "threshold", None)
+    if thr is not None:
+        return int(thr(n))
+    lo, hi = 0, n + 1          # invariant: pol flips somewhere in (lo, hi]
+    if pol(lo, n):
+        return -1
+    if not pol(hi - 1, n) and not pol(hi, n):
+        return n
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if pol(mid, n):
+            hi = mid
+        else:
+            lo = mid
+    return lo
 
 
 @dataclasses.dataclass
@@ -50,6 +109,11 @@ class AutoTuned:
             return count > self.prior_h * n
         return self.sparse_unit * count > self.dense_cost
 
+    def threshold(self, n: int) -> int:
+        if self.dense_cost is None or self.sparse_unit is None:
+            return int(self.prior_h * n)
+        return min(n, int(self.dense_cost / max(self.sparse_unit, 1e-12)))
+
     def observe(self, dense: bool, count: int, n: int, seconds: float) -> None:
         if dense:
             self.dense_cost = seconds if self.dense_cost is None else (
@@ -58,6 +122,21 @@ class AutoTuned:
             unit = seconds / max(count, 1)
             self.sparse_unit = unit if self.sparse_unit is None else (
                 0.7 * self.sparse_unit + 0.3 * unit)
+
+    def observe_chunk(self, dense_iters: int, sparse_iters: int,
+                      mean_count: float, seconds: float) -> None:
+        """Chunked observe hook for the outlined engine: one timing covers a
+        whole ``lax.while_loop`` chunk, so attribute the per-iteration cost
+        to the majority mode of the chunk (coarse, but the estimate only
+        steers the *next* chunk's threshold)."""
+        iters = dense_iters + sparse_iters
+        if iters == 0:
+            return
+        per_iter = seconds / iters
+        if dense_iters >= sparse_iters:
+            self.observe(True, int(mean_count), 0, per_iter)
+        else:
+            self.observe(False, int(max(mean_count, 1)), 0, per_iter)
 
 
 def make_policy(mode: str, h: float = 0.6) -> Policy:

@@ -43,8 +43,11 @@ def full_worklist(n_nodes: int) -> Worklist:
 def compact_mask(mask: jax.Array, capacity: int, n_nodes: int) -> tuple[jax.Array, jax.Array]:
     """Dense mask -> compacted items (the atomic-push replacement).
 
-    jnp reference implementation; ``kernels/compact.py`` is the Pallas
-    version with a sequential-grid carry.
+    ``capacity`` is static, so this compact also works *inside*
+    ``lax.while_loop`` bodies — the outlined engine relies on both step
+    kernels re-emitting the dual representation every trip without leaving
+    the device. jnp reference implementation; ``kernels/compact.py`` is the
+    Pallas version with a sequential-grid carry.
     """
     (idx,) = jnp.nonzero(mask, size=capacity, fill_value=n_nodes)
     return idx.astype(jnp.int32), mask.sum(dtype=jnp.int32)
@@ -82,3 +85,26 @@ def pick_bucket(caps: list[int], count: int) -> int:
         if c >= count:
             best = c
     return best
+
+
+def chunk_lower_bounds(caps: list[int]) -> list[int]:
+    """Exit thresholds for chunked outlining: the device loop running at
+    ``caps[i]`` keeps iterating while ``count > caps[i+1]`` (0 for the last
+    bucket), so the host re-enters only at bucket boundaries."""
+    return [*caps[1:], 0]
+
+
+def resize_items(wl: Worklist, capacity: int, n_nodes: int) -> Worklist:
+    """Host-side bucket change. The active set shrinks monotonically, so a
+    smaller bucket is a pure slice of the already-compacted items; growing
+    (only needed to round the initial full worklist up to ``caps[0]``) pads
+    with the ``n_nodes`` sentinel."""
+    c = wl.items.shape[0]
+    if capacity == c:
+        return wl
+    if capacity < c:
+        return Worklist(mask=wl.mask, items=wl.items[:capacity],
+                        count=wl.count)
+    pad = jnp.full((capacity - c,), n_nodes, wl.items.dtype)
+    return Worklist(mask=wl.mask, items=jnp.concatenate([wl.items, pad]),
+                    count=wl.count)

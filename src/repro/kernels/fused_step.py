@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused assign+resolve over one neighbour-color tile.
+
+The two-phase engine runs two kernels per iteration (conflict + mex), each
+re-reading a ``(TILE_R, K)`` neighbour-color tile from HBM. The fused step
+(DESIGN.md §5) pipelines resolve-of-last-round with assign-of-this-round,
+so ONE tile load feeds both:
+
+  1. conflict: row u loses iff pending and some neighbour holds the same
+     color with a higher (priority, id) pair — 5 compares + a K-reduce on
+     the resident tile.
+  2. windowed mex: forbidden bitmap OR-accumulated from the SAME tile
+     (plus the hub side-channel bitmap), then first-free via argmax.
+
+Outputs are per-row ``lose`` flags and the first free window index
+(``-1`` when the window is exhausted); the caller applies the need/pending
+masking and the hub-tail lose merge (those are O(N)/O(T) vector ops, not
+tile work). Working set is ~4 * TILE_R * max(K, W) * 4 bytes — VMEM-bound
+well under budget for TILE_R = 8..64, W a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(nc_ref, npr_ref, nid_ref, base_ref, cu_ref, pu_ref,
+                  uid_ref, pend_ref, extra_ref, lose_ref, first_ref, *,
+                  window: int, k_width: int):
+    nc = nc_ref[...]                      # (TR, K) neighbour colors
+    npr = npr_ref[...]                    # (TR, K) neighbour priorities
+    nid = nid_ref[...]                    # (TR, K) neighbour ids
+    base = base_ref[...]                  # (TR, 1) window base
+    cu = cu_ref[...]                      # (TR, 1) own (pending) color
+    pu = pu_ref[...]                      # (TR, 1) own priority
+    uid = uid_ref[...]                    # (TR, 1) own id
+    pend = pend_ref[...]                  # (TR, 1) int32 0/1 pending flag
+    extra = extra_ref[...]                # (TR, W) int32 0/1 hub forbidden
+
+    # --- resolve: conflict check on the resident tile ---
+    same = (nc == cu) & (cu >= 0)
+    higher = (npr > pu) | ((npr == pu) & (nid > uid))
+    lose = jnp.any(same & higher, axis=1) & (pend[:, 0] != 0)
+    lose_ref[...] = lose.astype(jnp.int32)[:, None]
+
+    # --- assign: windowed mex over the SAME tile ---
+    rel = nc - base                       # row-relative colors
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (nc.shape[0], window), 1)
+
+    def body(k, forb):
+        r = jax.lax.dynamic_slice_in_dim(rel, k, 1, axis=1)  # (TR, 1)
+        # negative rel (uncolored/pad neighbours) and rel >= W never match
+        return forb | (r == iota_w)
+
+    forb = jax.lax.fori_loop(0, k_width, body, extra != 0)
+    free = jnp.logical_not(forb)
+    has = jnp.any(free, axis=1)
+    first = jnp.argmax(free, axis=1).astype(jnp.int32)
+    first_ref[...] = jnp.where(has, first, -1)[:, None]
+
+
+def fused_step_pallas(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
+                      base: jax.Array, cu: jax.Array, pu: jax.Array,
+                      ids: jax.Array, pending: jax.Array,
+                      extra_forb: jax.Array, window: int, *,
+                      tile_rows: int = 32, interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Returns (lose, first_free) per row; ``first_free`` is -1 when the
+    whole window is forbidden.
+
+    nc:        (R, K) int32 neighbour colors (pad/uncolored < 0)
+    npr:       (R, K) int32 neighbour priorities (pad = -1)
+    nbr_ids:   (R, K) int32 neighbour ids (pad = N)
+    base:      (R,)  int32 window base per row
+    cu/pu/ids: (R,)  int32 own color / priority / id
+    pending:   (R,)  bool  speculated-last-round flag
+    extra_forb:(R, W) bool extra forbidden positions (hub tails)
+    """
+    r, k = nc.shape
+    assert extra_forb.shape == (r, window)
+    pad = (-r) % tile_rows
+    if pad:
+        nc = jnp.pad(nc, ((0, pad), (0, 0)), constant_values=-2)
+        npr = jnp.pad(npr, ((0, pad), (0, 0)), constant_values=-1)
+        nbr_ids = jnp.pad(nbr_ids, ((0, pad), (0, 0)))
+        base = jnp.pad(base, (0, pad))
+        cu = jnp.pad(cu, (0, pad), constant_values=-2)
+        pu = jnp.pad(pu, (0, pad), constant_values=-1)
+        ids = jnp.pad(ids, (0, pad))
+        pending = jnp.pad(pending, (0, pad))
+        extra_forb = jnp.pad(extra_forb, ((0, pad), (0, 0)))
+    rp = r + pad
+    col = lambda x: x[:, None].astype(jnp.int32)
+    row_spec = pl.BlockSpec((tile_rows, k), lambda i: (i, 0))
+    one_spec = pl.BlockSpec((tile_rows, 1), lambda i: (i, 0))
+    win_spec = pl.BlockSpec((tile_rows, window), lambda i: (i, 0))
+    lose, first = pl.pallas_call(
+        functools.partial(_fused_kernel, window=window, k_width=k),
+        grid=(rp // tile_rows,),
+        in_specs=[row_spec, row_spec, row_spec, one_spec, one_spec,
+                  one_spec, one_spec, one_spec, win_spec],
+        out_specs=[one_spec, one_spec],
+        out_shape=[jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((rp, 1), jnp.int32)],
+        interpret=interpret,
+    )(nc, npr, nbr_ids, col(base), col(cu), col(pu), col(ids),
+      col(pending), extra_forb.astype(jnp.int32))
+    return lose[:r, 0] != 0, first[:r, 0]

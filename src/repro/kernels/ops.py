@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels.compact import compact_pallas
 from repro.kernels.conflict import conflict_pallas
 from repro.kernels.frontier import frontier_probe_pallas
+from repro.kernels.fused_step import fused_step_pallas
 from repro.kernels.mex_window import mex_window_pallas
 
 
@@ -35,6 +36,17 @@ def conflict(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
              cu: jax.Array, pu: jax.Array, ids: jax.Array) -> jax.Array:
     return conflict_pallas(nc, npr, nbr_ids, cu, pu, ids,
                            interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("window",))
+def fused_step(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
+               base: jax.Array, cu: jax.Array, pu: jax.Array,
+               ids: jax.Array, pending: jax.Array, extra_forb: jax.Array,
+               window: int) -> tuple[jax.Array, jax.Array]:
+    """Fused resolve+assign: one neighbour-color tile feeds both the
+    conflict check and the windowed mex (see kernels/fused_step.py)."""
+    return fused_step_pallas(nc, npr, nbr_ids, base, cu, pu, ids, pending,
+                             extra_forb, window, interpret=_interpret())
 
 
 @jax.jit

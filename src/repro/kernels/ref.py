@@ -27,6 +27,18 @@ def conflict_ref(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
     return (same & higher).any(axis=1)
 
 
+def fused_step_ref(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
+                   base: jax.Array, cu: jax.Array, pu: jax.Array,
+                   ids: jax.Array, pending: jax.Array,
+                   extra_forb: jax.Array, window: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Fused resolve+assign oracle: conflict check on the pre-snapshot tile
+    plus windowed mex over the same tile."""
+    lose = conflict_ref(nc, npr, nbr_ids, cu, pu, ids) & pending
+    first = mex_window_ref(nc, base, extra_forb, window)
+    return lose, first
+
+
 def compact_ref(mask: jax.Array) -> tuple[jax.Array, jax.Array]:
     n = mask.shape[0]
     (idx,) = jnp.nonzero(mask, size=n, fill_value=n)

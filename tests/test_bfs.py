@@ -1,6 +1,7 @@
 """Hybrid direction-optimizing BFS (the paper's future work) vs oracle."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
