@@ -1,4 +1,4 @@
-"""Engine-dispatch comparison -> ``BENCH_engine.json``.
+"""Engine-dispatch comparison -> ``BENCH_engine.json`` / ``BENCH_dist.json``.
 
 Times the coloring engines end-to-end (post-compile wall clock) per suite
 graph:
@@ -13,15 +13,31 @@ counts and the per-dispatch TTI trace, so the perf trajectory of the hot
 path is tracked from PR 1 onward.
 
   PYTHONPATH=src python -m benchmarks.bench_engine_modes --scale 0.05
+
+``--dist`` times the sharded Pipe (core.distributed.color_distributed)
+across shard counts on simulated host-platform devices and writes
+``BENCH_dist.json`` with the per-shard-count scaling. When the current
+process has too few devices it re-execs itself with
+``--xla_force_host_platform_device_count`` (XLA fixes the device count at
+import, so the flag can't be applied in-process).
+
+  PYTHONPATH=src python -m benchmarks.bench_engine_modes --dist --shards 1,2,8
+
+``--smoke`` is the CI fast path: tiny scale, one run, both engine families.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 
 from benchmarks.common import csv_row, geomean
 from repro.core import color, color_outlined_hybrid
 from repro.graphs import make_suite, validate_coloring
+
+DIST_GRAPHS = ["europe_osm_s", "kron_g500-logn21_s", "hollywood-2009_s"]
 
 MODES = {
     "hybrid_host": lambda g: color(g, mode="hybrid", outline=False,
@@ -80,12 +96,120 @@ def bench(scale: float = 0.05, runs: int = 3, quiet: bool = False,
     return report
 
 
+def bench_dist(shards: tuple[int, ...] = (1, 2, 8), scale: float = 0.02,
+               runs: int = 2, quiet: bool = False,
+               out_path: str | None = "BENCH_dist.json") -> dict:
+    """Per-shard-count scaling of the sharded Pipe vs the host engine.
+
+    Requires ``jax.device_count() >= max(shards)`` (the CLI wrapper
+    re-execs with forced host-platform devices when needed).
+    """
+    import jax
+
+    from repro.core.distributed import color_distributed
+    from repro.graphs import make_graph
+
+    assert jax.device_count() >= max(shards), (
+        f"need {max(shards)} devices, have {jax.device_count()} — "
+        "run via --dist so the CLI re-execs with forced host devices")
+    report: dict = {"scale": scale, "runs": runs,
+                    "device_count": jax.device_count(),
+                    "backend": jax.default_backend(), "graphs": {}}
+    for name in DIST_GRAPHS:
+        g = make_graph(name, scale=scale)
+        row: dict[str, dict] = {}
+        host = color(g, mode="hybrid", fused=True, outline=False)
+        row["host_loop"] = {
+            "seconds": min(color(g, mode="hybrid", fused=True,
+                                 outline=False).total_seconds
+                           for _ in range(runs)),
+            "iterations": host.iterations, "n_colors": host.n_colors}
+        cache: dict = {}   # reuse jitted steps: time post-compile wall clock
+        for s in shards:
+            fn = lambda: color_distributed(g, n_shards=s,    # noqa: E731
+                                           steps_cache=cache)
+            warm = fn()                                      # compile
+            v = validate_coloring(g, warm.colors)
+            assert v["conflicts"] == 0 and v["uncolored"] == 0, (name, s)
+            row[f"shards_{s}"] = {
+                "seconds": min(fn().total_seconds for _ in range(runs)),
+                "iterations": warm.iterations,
+                "n_colors": warm.n_colors,
+                "mode_trace": warm.mode_trace,
+            }
+        report["graphs"][name] = row
+        if not quiet:
+            print(csv_row(name, *(f"{row[k]['seconds'] * 1e3:.2f}"
+                                  for k in row)))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        if not quiet:
+            print(f"# wrote {out_path}")
+    return report
+
+
+def _reexec_with_devices(argv: list[str], n_devices: int) -> int:
+    """Re-exec this module with forced host-platform devices (XLA binds the
+    device count at first import, so it cannot be changed in-process).
+
+    One hop only: if the marker env var is already set, the forced flag did
+    not raise the device count (e.g. a non-CPU default backend with fewer
+    devices) — fail with bench_dist's clear assertion instead of looping.
+    """
+    if os.environ.get("_BENCH_DIST_REEXEC") == "1":
+        raise SystemExit(
+            f"re-exec with --xla_force_host_platform_device_count="
+            f"{n_devices} did not yield enough devices (non-CPU backend?); "
+            f"run on a host with >= {n_devices} devices or pass a smaller "
+            f"--shards list")
+    env = dict(os.environ)
+    env["_BENCH_DIST_REEXEC"] = "1"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_devices}"
+                        ).strip()
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_engine_modes", *argv],
+        env=env).returncode
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--runs", type=int, default=3)
     ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--dist", action="store_true",
+                    help="bench the sharded Pipe across --shards")
+    ap.add_argument("--shards", default="1,2,8")
+    ap.add_argument("--dist-out", default="BENCH_dist.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast path: tiny scale, 1 run, no JSON for the "
+                         "host bench, dist bench on 1,2,8 shards")
     args = ap.parse_args()
+    shards = tuple(int(s) for s in args.shards.split(","))
+
+    if args.smoke:
+        import jax
+        bench(scale=0.01, runs=1, out_path=None)
+        if jax.device_count() < max(shards):
+            sys.exit(_reexec_with_devices(
+                ["--dist", "--shards", args.shards, "--scale", "0.01",
+                 "--runs", "1", "--dist-out", args.dist_out],
+                max(shards)))
+        bench_dist(shards, scale=0.01, runs=1, out_path=args.dist_out)
+        return
+    if args.dist:
+        import jax
+        if jax.device_count() < max(shards):
+            sys.exit(_reexec_with_devices(
+                ["--dist", "--shards", args.shards, "--scale",
+                 str(args.scale), "--runs", str(args.runs),
+                 "--dist-out", args.dist_out], max(shards)))
+        print(csv_row("graph", "host_loop",
+                      *(f"shards_{s}" for s in shards)))
+        bench_dist(shards, scale=args.scale, runs=args.runs,
+                   out_path=args.dist_out)
+        return
     print(csv_row("graph", *MODES, "speedup"))
     bench(args.scale, args.runs, out_path=args.out)
 

@@ -1,36 +1,104 @@
-"""Explicitly-distributed coloring engine (shard_map).
+"""Explicitly-distributed hybrid coloring engine (shard_map).
 
-Owner-computes partitioning of the paper's dense (topology-driven) step:
+Owner-computes partitioning of the paper's Pipe — BOTH phases, so the
+persistent-worklist invariant (DESIGN.md §1) holds across shard
+boundaries:
 
-  * each shard owns a contiguous node block (graphs.partition.repartition
-    balances total degree across blocks so no shard owns all hubs —
-    straggler mitigation at the data layout level);
-  * the ONLY cross-shard value is the color vector: one all-gather of
-    int32[N] per iteration (DESIGN.md §2 — the TPU analogue of the GPU's
-    global color array). 4N bytes/device/iter, independent of edge count;
-  * worklist state (mask/items/count) stays shard-local; the hybrid
-    switch decision needs one scalar psum (= IrGL Pipe's size check).
+  * each shard owns a contiguous node block (graphs.partition.
+    prepare_partition pads to equal, 8-aligned blocks and balances total
+    degree across them so no shard owns all hubs — straggler mitigation at
+    the data layout level);
+  * the ONLY cross-shard value is the color vector, published by the
+    additive all-gather trick: each shard psums its disjoint owner-block
+    delta (int32[N+1]) — the TPU analogue of the GPU's global color array.
+    The fused steps (the driver default) perform exactly ONE such exchange
+    per iteration — 4N bytes/device/iter, independent of edge count — and
+    the two-phase steps exactly TWO (speculate + undo); the invariant is
+    enforced at trace time via ``EXCHANGE_COUNTS`` (tests/
+    test_distributed.py);
+  * worklist state stays shard-local in both phases: the dense sweep
+    reads its block of ``mask`` and re-compacts its block of ``items``;
+    the sparse step gathers and O(C)-filters only its own items block,
+    sliced down a per-shard capacity ladder (``bucket_capacities(block)``)
+    at bucket boundaries. The hybrid switch decision needs one scalar
+    psum (= IrGL Pipe's size check), read back by the host driver
+    (``color_distributed``) exactly like the host-loop Pipe.
 
-This is the hand-written counterpart of the GSPMD-partitioned
-``ipgc.dense_step`` used by the dry-run; on one device it is bit-identical
-to the reference engine (tests/test_distributed.py).
+The dense two-phase step is bit-identical to the reference engine on any
+shard count; the fused steps are bit-identical to ``ipgc.fused_*_step``
+(so ``color_distributed`` reproduces ``engine.color(fused=True)``'s
+colors, iteration count and mode trace for fixed-H policies —
+DESIGN.md §6).
 """
 from __future__ import annotations
 
+import math
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import ipgc
-from repro.core.worklist import Worklist
-from repro.graphs.csr import NO_COLOR, PAD_COLOR
+from repro.core.engine import ColoringResult, adaptive_window
+from repro.core.policy import AutoTuned, Policy, Timer, make_policy
+from repro.core.worklist import (Worklist, bucket_capacities, compact_items,
+                                 full_worklist, pick_bucket, resize_block)
+from repro.graphs.csr import Graph, NO_COLOR, PAD_COLOR
+from repro.graphs.partition import prepare_partition
 
+# --- exchange instrumentation (trace-time) ---------------------------------
+# Every color-vector exchange goes through ``_exchange_colors`` so tests can
+# assert the communication volume per step: one psum'd int32[N+1] delta per
+# fused iteration, two per two-phase iteration. Counters increment at trace
+# time (à la ipgc.GATHER_COUNTS) — inspect by tracing a step with
+# ``jax.eval_shape``.
+EXCHANGE_COUNTS = {"color_psum": 0}
+
+
+def reset_exchange_counts() -> None:
+    EXCHANGE_COUNTS["color_psum"] = 0
+
+
+def _exchange_colors(colors: jax.Array, delta: jax.Array,
+                     node_axes: tuple) -> jax.Array:
+    """Additive all-gather: shards hold disjoint owner-block updates as a
+    dense delta against the replicated vector, so a psum IS the gather."""
+    EXCHANGE_COUNTS["color_psum"] += 1
+    return colors + jax.lax.psum(delta, node_axes)
+
+
+def _shard_offset(mesh, node_axes: tuple):
+    """Linear shard index over the flattened node axes (static shapes)."""
+    idx = 0
+    mult = 1
+    for ax in reversed(node_axes):
+        idx = idx + jax.lax.axis_index(ax) * mult
+        mult = mult * mesh.shape[ax]  # static (lax.axis_size: jax>=0.6)
+    return idx
+
+
+def _local_graph_view(ig_local: ipgc.IPGCGraph, n: int, ell_l, deg_l,
+                      hubslot_l, prio, tail_src, tail_dst, tail_valid,
+                      tail_slot, hub_ids) -> ipgc.IPGCGraph:
+    """IPGCGraph over this shard's row block (tail/priority replicated)."""
+    return ipgc.IPGCGraph(
+        n_nodes=n, ell_width=ig_local.ell_width, n_hub=ig_local.n_hub,
+        ell_idx=ell_l, degrees=deg_l, priority=prio,
+        tail_src=tail_src, tail_dst=tail_dst, tail_valid=tail_valid,
+        tail_slot=tail_slot, hub_slot=hubslot_l, hub_ids=hub_ids)
+
+
+# ---------------------------------------------------------------------------
+# dense (topology-driven) distributed step
+# ---------------------------------------------------------------------------
 
 def make_dist_dense_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
-                         *, window: int = 128, n_global: int | None = None):
+                         *, window: int = 128, n_global: int | None = None,
+                         fused: bool = False):
     """Build a shard_map'd dense step.
 
     ig_local: the IPGCGraph whose per-shard row blocks will be fed in
@@ -39,63 +107,87 @@ def make_dist_dense_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
     Returns step(colors_global, base, wl) -> (colors_global, base, wl)
     where colors_global is the replicated int32[N+1] vector and
     base/mask/items are node-sharded.
+
+    ``fused=False`` is the two-phase step (bit-identical to
+    ``ipgc.dense_step``, two color exchanges per iteration);
+    ``fused=True`` pipelines resolve-of-last-round with assign
+    (bit-identical to ``ipgc.fused_dense_step``, ONE exchange).
     """
     n = n_global or ig_local.n_nodes
 
     def local_step(colors, base_l, mask_l, ell_l, deg_l, hubslot_l,
                    prio, tail_src, tail_dst, tail_valid, tail_slot, hub_ids):
-        # block offset of this shard
-        idx = 0
-        mult = 1
-        for ax in reversed(node_axes):
-            idx = idx + jax.lax.axis_index(ax) * mult
-            mult = mult * mesh.shape[ax]  # static (lax.axis_size: jax>=0.6)
+        idx = _shard_offset(mesh, node_axes)
         blk = ell_l.shape[0]
         row_ids = idx * blk + jnp.arange(blk, dtype=jnp.int32)
-
+        ig = _local_graph_view(ig_local, n, ell_l, deg_l, hubslot_l, prio,
+                               tail_src, tail_dst, tail_valid, tail_slot,
+                               hub_ids)
         active = mask_l
         nc = colors[ell_l]                              # local gather
-        base_rows = base_l
-        ig = ipgc.IPGCGraph(
-            n_nodes=n, ell_width=ig_local.ell_width, n_hub=ig_local.n_hub,
-            ell_idx=ell_l, degrees=deg_l, priority=prio,
-            tail_src=tail_src, tail_dst=tail_dst, tail_valid=tail_valid,
-            tail_slot=tail_slot, hub_slot=hubslot_l, hub_ids=hub_ids)
-        if ig_local.n_hub > 0:
-            hub_forb = ipgc._hub_forbidden(ig, colors, base_pad := jnp.zeros(
-                (n,), jnp.int32).at[row_ids].set(base_l), window)
-            extra = hub_forb[jnp.minimum(hubslot_l, ig_local.n_hub)]
+        slot_c = jnp.minimum(hubslot_l, ig_local.n_hub)
+
+        if fused:
+            cu = colors[row_ids]
+            pu = prio[row_ids]
+            pending = active & (cu >= 0)
+            npr = prio[ell_l]
+            if ig_local.n_hub > 0:
+                base_pad = jnp.zeros((n,), jnp.int32).at[row_ids].set(base_l)
+                extra = ipgc._hub_forbidden(ig, colors, base_pad,
+                                            window)[slot_c]
+                # only owned hub slots are read, and their tail_src rows are
+                # owned too — a local scatter of pending suffices (no psum)
+                pending_full = jnp.zeros((n + 1,), bool).at[row_ids].set(
+                    pending)
+                hub_lose = ipgc._hub_lose(ig, colors, pending_full)[slot_c]
+            else:
+                extra = None
+                hub_lose = None
+            lose, first, has = ipgc._fused_rows(
+                ig, nc, npr, ell_l, base_l, cu, pu, row_ids, pending, extra,
+                window, "jnp")
+            if hub_lose is not None:
+                lose = lose | (hub_lose & pending)
+            need = lose | (active & (cu < 0))
+            new_c = jnp.where(need & has, base_l + first,
+                              jnp.where(lose, NO_COLOR, cu))
+            new_base = jnp.where(need & ~has, base_l + window, base_l)
+            # ONE exchange publishes speculated colors AND uncolorings
+            delta = jnp.zeros((n + 1,), jnp.int32).at[row_ids].set(new_c - cu)
+            colors_out = _exchange_colors(colors, delta, node_axes)
+            still = need
         else:
-            extra = None
-        new_c, new_base, newly = ipgc._mex_rows(
-            ig, nc, base_rows, active, colors[row_ids], extra, window, "jnp")
+            # --- assign ---
+            if ig_local.n_hub > 0:
+                base_pad = jnp.zeros((n,), jnp.int32).at[row_ids].set(base_l)
+                hub_forb = ipgc._hub_forbidden(ig, colors, base_pad, window)
+                extra = hub_forb[slot_c]
+            else:
+                extra = None
+            new_c, new_base, newly = ipgc._mex_rows(
+                ig, nc, base_l, active, colors[row_ids], extra, window, "jnp")
+            # exchange 1: publish the speculative colors of owned rows
+            delta = jnp.zeros((n + 1,), jnp.int32).at[row_ids].set(
+                jnp.where(active, new_c, colors[row_ids]) - colors[row_ids])
+            colors2 = _exchange_colors(colors, delta, node_axes)
+            # --- resolve ---
+            lose = ipgc._lose_rows(ig, ell_l, row_ids, colors2, newly, "jnp")
+            if ig_local.n_hub > 0:
+                # local scatter: owned slots only read owned tail_src rows
+                newly_g = jnp.zeros((n + 1,), bool).at[row_ids].set(newly)
+                hub_l = ipgc._hub_lose(ig, colors2, newly_g)
+                lose = lose | hub_l[slot_c]
+            # exchange 2: uncolor losers (their writes were in colors2)
+            undo = jnp.zeros((n + 1,), jnp.int32).at[row_ids].set(
+                jnp.where(lose, NO_COLOR - colors2[row_ids], 0))
+            colors_out = _exchange_colors(colors2, undo, node_axes)
+            still = lose | (active & ~newly)
 
-        # exchange: scatter local colors into the global vector, all-gather
-        part = jnp.full((n + 1,), PAD_COLOR, jnp.int32)
-        part = part.at[row_ids].set(
-            jnp.where(active, new_c, colors[row_ids]))
-        # additive all-gather trick: psum of disjoint one-shard updates
-        delta = jnp.where(part == PAD_COLOR, 0,
-                          part - colors).astype(jnp.int32)
-        colors2 = colors + jax.lax.psum(delta, node_axes)
-
-        lose = ipgc._lose_rows(ig, ell_l, row_ids, colors2, newly, "jnp")
-        if ig_local.n_hub > 0:
-            newly_g = jnp.zeros((n + 1,), bool).at[row_ids].set(newly)
-            newly_g = jax.lax.psum(newly_g.astype(jnp.int32),
-                                   node_axes).astype(bool)
-            hub_l = ipgc._hub_lose(ig, colors2, newly_g)
-            lose = lose | hub_l[jnp.minimum(hubslot_l, ig_local.n_hub)]
-        # uncolor losers (their writes were included in colors2)
-        undo = jnp.zeros((n + 1,), jnp.int32).at[row_ids].set(
-            jnp.where(lose, NO_COLOR - colors2[row_ids], 0))
-        colors3 = colors2 + jax.lax.psum(undo, node_axes)
-
-        still = lose | (active & ~newly)
         (items_l,) = jnp.nonzero(still, size=blk, fill_value=blk)
         items_l = jnp.where(items_l < blk, idx * blk + items_l, n)
         count = jax.lax.psum(still.sum(dtype=jnp.int32), node_axes)
-        return colors3, new_base, still, items_l.astype(jnp.int32), count
+        return colors_out, new_base, still, items_l.astype(jnp.int32), count
 
     na = node_axes
     fn = shard_map(
@@ -115,3 +207,256 @@ def make_dist_dense_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
         return colors3, base2, Worklist(mask=mask, items=items, count=count)
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# sparse (data-driven) distributed step — shard-local items/count
+# ---------------------------------------------------------------------------
+
+def make_dist_sparse_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
+                          *, window: int = 128, n_global: int | None = None,
+                          fused: bool = False):
+    """Build a shard_map'd data-driven step over shard-local worklists.
+
+    Each shard gathers only its own compacted items block (global node ids
+    it owns, padded with N), so per-iteration cost tracks the shard's
+    active-set slice, not its block size. The color exchange is the same
+    additive all-gather as the dense step; the worklist filter
+    (``compact_items``) and the ``mask`` write-back stay O(C) and
+    shard-local. The returned ``step(colors, base, wl)`` expects
+    ``wl.items`` of global shape ``n_shards * C`` (per-shard blocks) and
+    retraces per capacity bucket, exactly like the host engine.
+    """
+    n = n_global or ig_local.n_nodes
+
+    def local_step(colors, base_l, mask_l, items_l, ell_l, deg_l, hubslot_l,
+                   prio, tail_src, tail_dst, tail_valid, tail_slot, hub_ids):
+        idx = _shard_offset(mesh, node_axes)
+        blk = ell_l.shape[0]
+        row_ids = idx * blk + jnp.arange(blk, dtype=jnp.int32)
+        ig = _local_graph_view(ig_local, n, ell_l, deg_l, hubslot_l, prio,
+                               tail_src, tail_dst, tail_valid, tail_slot,
+                               hub_ids)
+        valid = items_l < n
+        # local row index of each owned item (this shard only ever holds
+        # ids from its own block; clip guards the pad lanes)
+        local = jnp.clip(jnp.where(valid, items_l - idx * blk, 0), 0, blk - 1)
+        ids = jnp.where(valid, items_l, n)              # global ids, pad n
+        ell_rows = jnp.where(valid[:, None], ell_l[local], n)    # (C, K)
+        nc = colors[ell_rows]
+        base_rows = base_l[local]
+        cu = colors[ids]                                # pad -> PAD_COLOR
+        if ig_local.n_hub > 0:
+            base_pad = jnp.zeros((n,), jnp.int32).at[row_ids].set(base_l)
+            hub_forb = ipgc._hub_forbidden(ig, colors, base_pad, window)
+            slot_c = jnp.minimum(jnp.where(valid, hubslot_l[local],
+                                           ig_local.n_hub), ig_local.n_hub)
+            extra = hub_forb[slot_c]
+        else:
+            slot_c = None
+            extra = None
+
+        if fused:
+            pu = prio[ids]
+            npr = prio[ell_rows]
+            pending = valid & (cu >= 0)
+            if ig_local.n_hub > 0:
+                pending_full = jnp.zeros((n + 1,), bool).at[
+                    jnp.where(pending, items_l, n)].set(pending, mode="drop")
+                hub_lose = (ipgc._hub_lose(ig, colors, pending_full)[slot_c]
+                            & valid)
+            else:
+                hub_lose = None
+            lose, first, has = ipgc._fused_rows(
+                ig, nc, npr, ell_rows, base_rows, cu, pu, ids, pending,
+                extra, window, "jnp")
+            if hub_lose is not None:
+                lose = lose | (hub_lose & pending)
+            need = lose | (valid & (cu < 0))
+            new_c = jnp.where(need & has, base_rows + first,
+                              jnp.where(lose, NO_COLOR, cu))
+            new_base_rows = jnp.where(need & ~has, base_rows + window,
+                                      base_rows)
+            # ONE exchange (pad lanes contribute delta 0 at the sentinel)
+            delta = jnp.zeros((n + 1,), jnp.int32).at[ids].set(new_c - cu)
+            colors_out = _exchange_colors(colors, delta, node_axes)
+            still = need
+        else:
+            # --- assign ---
+            new_c, new_base_rows, newly = ipgc._mex_rows(
+                ig, nc, base_rows, valid, cu, extra, window, "jnp")
+            delta = jnp.zeros((n + 1,), jnp.int32).at[ids].set(
+                jnp.where(valid, new_c - cu, 0))
+            colors2 = _exchange_colors(colors, delta, node_axes)
+            # --- resolve ---
+            lose = ipgc._lose_rows(ig, ell_rows, ids, colors2, newly, "jnp")
+            if ig_local.n_hub > 0:
+                newly_full = jnp.zeros((n + 1,), bool).at[
+                    jnp.where(newly, items_l, n)].set(newly, mode="drop")
+                hub_l = ipgc._hub_lose(ig, colors2, newly_full)
+                lose = lose | (hub_l[slot_c] & valid)
+            undo = jnp.zeros((n + 1,), jnp.int32).at[ids].set(
+                jnp.where(lose, NO_COLOR - colors2[ids], 0))
+            colors_out = _exchange_colors(colors2, undo, node_axes)
+            still = lose | (valid & ~newly)
+
+        # --- maintain the worklist in O(C), shard-local ---
+        new_items, local_count = compact_items(items_l, still, n)
+        mask2 = mask_l.at[jnp.where(valid, local, blk)].set(still,
+                                                            mode="drop")
+        base2 = base_l.at[jnp.where(valid, local, blk)].set(new_base_rows,
+                                                            mode="drop")
+        count = jax.lax.psum(local_count, node_axes)
+        return colors_out, base2, mask2, new_items, count
+
+    na = node_axes
+    fn = shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(), P(na), P(na), P(na), P(na, None), P(na), P(na),
+                  P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), P(na), P(na), P(na), P()),
+        check_rep=False)
+
+    @jax.jit
+    def step(colors, base, wl: Worklist):
+        colors3, base2, mask, items, count = fn(
+            colors, base, wl.mask, wl.items, ig_local.ell_idx,
+            ig_local.degrees, ig_local.hub_slot, ig_local.priority,
+            ig_local.tail_src, ig_local.tail_dst, ig_local.tail_valid,
+            ig_local.tail_slot, ig_local.hub_ids)
+        return colors3, base2, Worklist(mask=mask, items=items, count=count)
+
+    return step
+
+
+def make_dist_resize(mesh, node_axes: tuple, n_global: int):
+    """Shard-local bucket change: every shard slices (or pads) its own
+    already-compacted items block — the distributed form of
+    ``worklist.resize_items``. Valid whenever the new per-shard capacity
+    bounds every shard's live count; the driver guarantees it by picking
+    ``pick_bucket(caps_block, min(global_count, block))``."""
+    na = node_axes
+
+    @partial(jax.jit, static_argnames=("capacity",))
+    def resize(wl: Worklist, capacity: int) -> Worklist:
+        fn = shard_map(lambda il: resize_block(il, capacity, n_global),
+                       mesh=mesh, in_specs=P(na), out_specs=P(na),
+                       check_rep=False)
+        return Worklist(mask=wl.mask, items=fn(wl.items), count=wl.count)
+
+    return resize
+
+
+# ---------------------------------------------------------------------------
+# the distributed hybrid Pipe driver
+# ---------------------------------------------------------------------------
+
+def color_distributed(
+    g: Graph,
+    *,
+    n_shards: int | None = None,
+    mesh=None,
+    node_axes: tuple = ("data",),
+    mode: str = "hybrid",
+    h: float = 0.6,
+    window: int | str = "auto",
+    bucket_ratio: int = 2,
+    max_iter: int = 10_000,
+    priority: str = "hash",
+    policy: Policy | None = None,
+    collect_tti: bool = False,
+    fused: bool | None = True,    # fused = ONE color exchange per iteration
+    balance: bool = True,
+    steps_cache: dict | None = None,
+) -> ColoringResult:
+    """Sharded hybrid Pipe: the host-loop driver over the shard_map steps.
+
+    The graph is padded + degree-balanced into equal owner blocks
+    (``prepare_partition``); the driver then runs the exact host-Pipe
+    control flow — policy on the psum'd global count, per-shard capacity
+    ladder with slices at bucket boundaries — over the distributed steps.
+    With the default ``fused=True`` the steps are bit-identical to
+    ``ipgc.fused_*_step`` on the repartitioned graph, so for fixed-H
+    policies the result matches ``engine.color(g2, fused=True)`` exactly
+    (colors, iteration count, mode trace) on ANY shard count
+    (tests/test_distributed.py). Colors are returned in ``g``'s original
+    node labeling.
+
+    ``fused=None`` resolves to the distributed default (True).
+    ``steps_cache``: pass the same dict across calls to reuse the
+    partitioned graph and the jitted shard_map steps (each call otherwise
+    builds fresh jit closures, so repeat colorings of the same graph —
+    and warm benchmark timings — would re-trace from scratch).
+    """
+    assert isinstance(g, Graph), "color_distributed needs a host Graph"
+    if fused is None:
+        fused = True
+    custom_mesh = mesh is not None
+    if mesh is None:
+        if n_shards is None:
+            n_shards = jax.device_count()
+        mesh = jax.make_mesh((n_shards,), node_axes)
+    else:
+        n_shards = math.prod(mesh.shape[a] for a in node_axes)
+    # auto-built meshes over the same device set are interchangeable; a
+    # caller-provided mesh is cached by identity (steps close over it)
+    key = (g.name, g.n_nodes, g.n_edges, n_shards, node_axes, window,
+           priority, fused, balance, id(mesh) if custom_mesh else None)
+    if steps_cache is not None and key in steps_cache:
+        (g2, new_of_old, ig, window, dense_fn, sparse_fn,
+         resize_fn) = steps_cache[key]
+    else:
+        g2, new_of_old = prepare_partition(g, n_shards, balance=balance)
+        if window == "auto":
+            window = adaptive_window(g2)
+        ig = ipgc.prepare(g2, priority=priority)
+        dense_fn = make_dist_dense_step(ig, mesh, node_axes, window=window,
+                                        fused=fused)
+        sparse_fn = make_dist_sparse_step(ig, mesh, node_axes, window=window,
+                                          fused=fused)
+        resize_fn = make_dist_resize(mesh, node_axes, ig.n_nodes)
+        if steps_cache is not None:
+            steps_cache[key] = (g2, new_of_old, ig, window, dense_fn,
+                                sparse_fn, resize_fn)
+    n = ig.n_nodes
+    block = n // n_shards
+    pol = policy or make_policy(mode, h)
+    caps = bucket_capacities(block, ratio=bucket_ratio)  # per-shard ladder
+
+    colors = ipgc.init_colors(n)
+    base = jnp.zeros((n,), dtype=jnp.int32)
+    wl = full_worklist(n)          # per-shard blocks == arange slices
+    count = n
+
+    trace: list[str] = []
+    counts: list[int] = []
+    tti: list[float] = []
+    t_start = time.perf_counter()
+    it = 0
+    while count > 0 and it < max_iter:
+        use_dense = bool(pol(count, n))
+        counts.append(count)
+        with Timer() as t:
+            if use_dense:
+                colors, base, wl = dense_fn(colors, base, wl)
+            else:
+                # any shard's live count is <= min(global count, block)
+                cap = pick_bucket(caps, min(count, block))
+                if wl.items.shape[0] > n_shards * cap:
+                    wl = resize_fn(wl, cap)
+                colors, base, wl = sparse_fn(colors, base, wl)
+            count = int(wl.count)  # the Pipe's single scalar read-back
+        trace.append("D" if use_dense else "S")
+        if collect_tti:
+            tti.append(t.seconds)
+        if isinstance(pol, AutoTuned):
+            pol.observe(use_dense, counts[-1], n, t.seconds)
+        it += 1
+
+    total = time.perf_counter() - t_start
+    full = np.asarray(colors[:n])
+    final = full[new_of_old[:g.n_nodes]]   # back to original labels
+    n_colors = int(final.max()) + 1 if final.size else 0
+    return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
+                          mode_trace="".join(trace), counts=counts, tti=tti,
+                          total_seconds=total, host_dispatches=it)

@@ -38,8 +38,21 @@ from repro.graphs.csr import Graph
 
 # Outlining as the default fast path is gated behind this env flag (read
 # once at import): with REPRO_OUTLINE_HYBRID=1, ``color`` transparently
-# routes through ``color_outlined_hybrid``.
-_OUTLINE_DEFAULT = os.environ.get("REPRO_OUTLINE_HYBRID", "0") == "1"
+# routes through ``color_outlined_hybrid``. Programmatic callers toggle it
+# after import via ``set_outline_default`` (mirrors ``ipgc.set_force_hub``)
+# instead of mutating os.environ.
+_OUTLINE_ENV = os.environ.get("REPRO_OUTLINE_HYBRID", "0") == "1"
+_outline_override: bool | None = None
+
+
+def set_outline_default(value: bool | None) -> None:
+    """Override (or with ``None`` reset) the outline-by-default routing."""
+    global _outline_override
+    _outline_override = value
+
+
+def outline_default() -> bool:
+    return _OUTLINE_ENV if _outline_override is None else _outline_override
 
 
 @dataclasses.dataclass
@@ -79,16 +92,30 @@ def color(
     priority: str = "hash",
     policy: Policy | None = None,
     collect_tti: bool = False,
-    fused: bool = False,          # one-gather fused assign/resolve steps
-    outline: bool | None = None,  # None -> REPRO_OUTLINE_HYBRID env default
+    fused: bool | None = None,    # one-gather fused steps; None = the
+    #                               dispatched engine's default (host loop
+    #                               False, outlined per backend, dist True)
+    outline: bool | None = None,  # None -> set_outline_default()/env default
+    n_shards: int | None = None,  # dist-* modes: shard count (None = all)
 ) -> ColoringResult:
+    if mode.startswith("dist-"):
+        # sharded Pipe (shard_map steps over owner blocks); lazy import —
+        # distributed.py itself imports this module for the result type
+        from repro.core.distributed import color_distributed
+        assert isinstance(g, Graph), "distributed modes need a host Graph"
+        return color_distributed(
+            g, n_shards=n_shards, mode=mode, h=h, window=window,
+            bucket_ratio=bucket_ratio, max_iter=max_iter, priority=priority,
+            policy=policy, collect_tti=collect_tti, fused=fused)
     if outline is None:
-        outline = _OUTLINE_DEFAULT
+        outline = outline_default()
     if outline:
         return color_outlined_hybrid(
             g, mode=mode, h=h, window=window, impl=impl,
             bucket_ratio=bucket_ratio, max_iter=max_iter, priority=priority,
             policy=policy, collect_tti=collect_tti, fused=fused)
+    if fused is None:
+        fused = False                  # host-loop default: two-phase steps
     if window == "auto":
         assert isinstance(g, Graph)
         window = adaptive_window(g)

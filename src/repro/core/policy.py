@@ -140,6 +140,11 @@ class AutoTuned:
 
 
 def make_policy(mode: str, h: float = 0.6) -> Policy:
+    # "dist-hybrid" etc. select the sharded engine at the dispatch layer;
+    # the switching policy itself is the same — the distributed driver
+    # feeds it the psum'd global count (DESIGN.md §6)
+    if mode.startswith("dist-"):
+        mode = mode[len("dist-"):]
     if mode == "hybrid":
         return fixed_h(h)
     if mode == "hybrid-auto":

@@ -94,17 +94,28 @@ def chunk_lower_bounds(caps: list[int]) -> list[int]:
     return [*caps[1:], 0]
 
 
+def resize_block(items: jax.Array, capacity: int, n_nodes: int) -> jax.Array:
+    """Resize one compacted items block to a new static capacity.
+
+    Shrinking is a pure slice (valid only when the block's live count is
+    <= ``capacity`` — the ladder guarantees it); growing pads with the
+    ``n_nodes`` sentinel. Pure and shape-static, so it works both on the
+    host (``resize_items``) and inside a ``shard_map`` region, where each
+    shard resizes its own worklist block (distributed.make_dist_resize)."""
+    c = items.shape[0]
+    if capacity == c:
+        return items
+    if capacity < c:
+        return items[:capacity]
+    pad = jnp.full((capacity - c,), n_nodes, items.dtype)
+    return jnp.concatenate([items, pad])
+
+
 def resize_items(wl: Worklist, capacity: int, n_nodes: int) -> Worklist:
     """Host-side bucket change. The active set shrinks monotonically, so a
     smaller bucket is a pure slice of the already-compacted items; growing
     (only needed to round the initial full worklist up to ``caps[0]``) pads
     with the ``n_nodes`` sentinel."""
-    c = wl.items.shape[0]
-    if capacity == c:
-        return wl
-    if capacity < c:
-        return Worklist(mask=wl.mask, items=wl.items[:capacity],
-                        count=wl.count)
-    pad = jnp.full((capacity - c,), n_nodes, wl.items.dtype)
-    return Worklist(mask=wl.mask, items=jnp.concatenate([wl.items, pad]),
+    return Worklist(mask=wl.mask,
+                    items=resize_block(wl.items, capacity, n_nodes),
                     count=wl.count)

@@ -18,6 +18,15 @@ def balance_permutation(g: Graph, n_shards: int, seed: int = 0) -> np.ndarray:
     Greedy LPT over degree: sort by degree desc, deal round-robin snake-wise
     into shards, then concatenate. Keeps hub nodes spread across shards
     (straggler mitigation for the coloring engine: no shard owns all hubs).
+
+    Block alignment caveat: the per-shard lists line up with the equal
+    ``shard_bounds`` blocks only when ``n_nodes % n_shards == 0`` (otherwise
+    the snake's pad slots fall in interior columns and shift every later
+    block boundary). ``prepare_partition`` pads the graph with isolated
+    nodes first, which both restores alignment and gives every shard the
+    equal block that ``shard_map`` requires; with divisible n the max
+    per-shard load is bounded by mean_load + max_degree
+    (tests/test_property.py).
     """
     deg = np.asarray(g.arrays.degrees)
     order = np.argsort(-deg, kind="stable")
@@ -55,6 +64,36 @@ def repartition(g: Graph, n_shards: int, *, balance: bool = True,
                      name=g.name + f"@p{n_shards}",
                      ell_cap=g.ell_width, symmetrize=False)
     return g2, new_of_old
+
+
+def prepare_partition(g: Graph, n_shards: int, *, balance: bool = True,
+                      align: int = 8, seed: int = 0
+                      ) -> tuple[Graph, np.ndarray]:
+    """Pad + repartition a graph for the distributed coloring engine.
+
+    Pads the node count up to ``n_shards * ceil(ceil(n/S)/align)*align``
+    with isolated (degree-0) nodes so that every shard owns an equal,
+    ``align``-multiple block — the shape contract of the shard_map steps
+    and of the per-shard capacity ladder — then relabels via
+    ``repartition`` so total degree is balanced across blocks. Padding
+    BEFORE balancing keeps the snake deal's columns exactly block-sized
+    (see ``balance_permutation``), so shard s truly owns
+    ``[s*B, (s+1)*B)``.
+
+    Returns ``(g2, new_of_old)``; ``new_of_old[:g.n_nodes]`` maps original
+    ids into ``g2``'s labeling (the padding nodes occupy the remaining new
+    ids and are colored trivially — strip them by mapping back).
+    """
+    block = -(-g.n_nodes // n_shards)
+    block = -(-block // align) * align
+    n_pad = block * n_shards
+    if n_pad != g.n_nodes:
+        deg = np.asarray(g.arrays.degrees)
+        src = np.repeat(np.arange(g.n_nodes), deg)
+        dst = np.asarray(g.arrays.col_idx)
+        g = build_graph(src, dst, n_pad, name=g.name,
+                        ell_cap=g.ell_width, symmetrize=False)
+    return repartition(g, n_shards, balance=balance, seed=seed)
 
 
 def shard_bounds(n_nodes: int, n_shards: int) -> np.ndarray:

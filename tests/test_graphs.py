@@ -75,6 +75,27 @@ def test_repartition_preserves_graph():
         sorted(np.asarray(g.arrays.degrees).tolist())
 
 
+def test_prepare_partition_pads_and_aligns():
+    """The distributed engine's layout contract: equal 8-aligned shard
+    blocks, original edges embedded exactly, padding nodes isolated."""
+    from repro.graphs.partition import prepare_partition
+    g = make_graph("hollywood-2009_s", scale=0.01)     # n=600: needs padding
+    for n_shards in (1, 3, 8):
+        g2, new_of_old = prepare_partition(g, n_shards)
+        assert g2.n_nodes % (8 * n_shards) == 0
+        assert g2.n_nodes >= g.n_nodes
+        assert g2.n_edges == g.n_edges
+        deg2 = np.asarray(g2.arrays.degrees)
+        np.testing.assert_array_equal(deg2[new_of_old[:g.n_nodes]],
+                                      np.asarray(g.arrays.degrees))
+        assert deg2.sum() == np.asarray(g.arrays.degrees).sum()
+        # block-aligned balance: no shard owns more than mean + max degree
+        block = g2.n_nodes // n_shards
+        loads = [deg2[s * block:(s + 1) * block].sum()
+                 for s in range(n_shards)]
+        assert max(loads) <= deg2.sum() / n_shards + deg2.max()
+
+
 def test_load_mtx_roundtrip(tmp_path):
     p = tmp_path / "t.mtx"
     p.write_text("%%MatrixMarket matrix coordinate pattern symmetric\n"

@@ -74,6 +74,27 @@ def test_outlined_edge_cases():
             color(g, mode="hybrid", fused=True, outline=False).colors)
 
 
+def test_set_outline_default_toggles_after_import(graphs):
+    """The env flag is read once at import; programmatic toggling must go
+    through the cached setter (mirrors ipgc.set_force_hub) and take effect
+    immediately on ``color(outline=None)``."""
+    from repro.core import set_outline_default
+    from repro.core.engine import outline_default
+    g = graphs["europe_osm_s"]
+    try:
+        set_outline_default(True)
+        assert outline_default() is True
+        r_on = color(g, mode="hybrid")          # outline=None -> outlined
+        assert r_on.host_dispatches < r_on.iterations
+        set_outline_default(False)
+        assert outline_default() is False
+        r_off = color(g, mode="hybrid")         # outline=None -> host loop
+        assert r_off.host_dispatches == r_off.iterations
+        np.testing.assert_array_equal(r_on.colors, r_off.colors)
+    finally:
+        set_outline_default(None)               # reset to the env default
+
+
 def test_outline_flag_on_color(graphs):
     g = graphs["kron_g500-logn21_s"]
     r_flag = color(g, mode="hybrid", outline=True)

@@ -10,6 +10,8 @@ from hypothesis import strategies as st
 from repro.core import color, jpl_color
 from repro.core.worklist import bucket_capacities, pick_bucket
 from repro.graphs import build_graph, validate_coloring
+from repro.graphs.partition import (balance_permutation, prepare_partition,
+                                    repartition, shard_bounds)
 from repro.graphs.sampler import sample_blocks
 
 
@@ -54,6 +56,79 @@ def test_bucket_ladder_properties(n, ratio):
     assert all(a > b for a, b in zip(caps, caps[1:]))
     for c in (1, n // 3 + 1, n):
         assert pick_bucket(caps, c) >= c
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 8), st.integers(0, 500), st.data())
+def test_balance_permutation_is_balanced_permutation(blocks, n_shards, e,
+                                                     data):
+    """balance_permutation returns a true permutation whose per-shard
+    degree load is bounded by mean_load + max_degree (LPT snake deal;
+    blocks aligned because n is a multiple of n_shards — the layout
+    prepare_partition guarantees the engine)."""
+    n = blocks * n_shards
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=max(e, 1))
+    dst = rng.integers(0, n, size=max(e, 1))
+    g = build_graph(src, dst, n, name="h", ell_cap=16)
+    perm = balance_permutation(g, n_shards)
+    assert sorted(perm.tolist()) == list(range(n))   # a true permutation
+    deg = np.asarray(g.arrays.degrees)
+    bounds = shard_bounds(n, n_shards)
+    loads = [deg[perm[bounds[s]:bounds[s + 1]]].sum()
+             for s in range(n_shards)]
+    bound = deg.sum() / n_shards + (deg.max() if n else 0)
+    assert max(loads) <= bound, (loads, bound)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 100), st.integers(1, 8), st.data())
+def test_repartition_relabel_preserves_coloring_validity(n, n_shards, data):
+    """A valid coloring of the original graph, pushed through the
+    repartition relabeling, is a valid coloring of the relabeled graph
+    (and vice versa) — the invariant the distributed engine's map-back
+    relies on."""
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=3 * n)
+    dst = rng.integers(0, n, size=3 * n)
+    g = build_graph(src, dst, n, name="h", ell_cap=16)
+    r = color(g, mode="hybrid", window=32)
+    assert validate_coloring(g, r.colors)["conflicts"] == 0
+    g2, new_of_old = repartition(g, n_shards,
+                                 balance=data.draw(st.booleans()))
+    relabeled = np.empty(n, dtype=r.colors.dtype)
+    relabeled[new_of_old] = r.colors                 # color moves with node
+    v2 = validate_coloring(g2, relabeled)
+    assert v2["conflicts"] == 0 and v2["uncolored"] == 0
+    assert v2["n_colors"] == r.n_colors
+    # and back: coloring the relabeled graph maps to a valid original one
+    r2 = color(g2, mode="hybrid", window=32)
+    v_back = validate_coloring(g, r2.colors[new_of_old])
+    assert v_back["conflicts"] == 0 and v_back["uncolored"] == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 8), st.data())
+def test_prepare_partition_block_contract(n, n_shards, data):
+    """prepare_partition pads to equal 8-aligned shard blocks and its
+    relabeling embeds the original graph exactly (the shard_map shape
+    contract of the distributed engine)."""
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=2 * n)
+    dst = rng.integers(0, n, size=2 * n)
+    g = build_graph(src, dst, n, name="h", ell_cap=16)
+    g2, new_of_old = prepare_partition(g, n_shards)
+    assert g2.n_nodes % (8 * n_shards) == 0
+    assert g2.n_nodes >= n
+    assert g2.n_edges == g.n_edges                   # padding adds no edges
+    deg = np.asarray(g.arrays.degrees)
+    deg2 = np.asarray(g2.arrays.degrees)
+    np.testing.assert_array_equal(deg2[new_of_old[:n]], deg)
+    # pad nodes are isolated
+    assert deg2.sum() == deg.sum()
 
 
 @settings(max_examples=10, deadline=None)
