@@ -23,7 +23,17 @@ import, so the flag can't be applied in-process).
 
   PYTHONPATH=src python -m benchmarks.bench_engine_modes --dist --shards 1,2,8
 
-``--smoke`` is the CI fast path: tiny scale, one run, both engine families.
+``--algos`` sweeps the registered coloring algorithms (repro.algos) over
+the execution modes each declares — host-loop, outlined, and dist-hybrid
+where shard-safe — and writes ``BENCH_algos.json`` with time-to-solution
+AND color count per algorithm x mode cell (the speed/quality frontier the
+subsystem exists to expose). Undeclared cells carry the algorithm's own
+reason string instead of numbers.
+
+  PYTHONPATH=src python -m benchmarks.bench_engine_modes --algos
+
+``--smoke`` is the CI fast path: tiny scale, one run, both engine families
+(combine with --algos for the algos matrix leg).
 """
 from __future__ import annotations
 
@@ -34,8 +44,8 @@ import subprocess
 import sys
 
 from benchmarks.common import csv_row, geomean
-from repro.core import color, color_outlined_hybrid
-from repro.graphs import make_suite, validate_coloring
+from repro.core import color, color_outlined_hybrid, verify_coloring
+from repro.graphs import make_suite
 
 DIST_GRAPHS = ["europe_osm_s", "kron_g500-logn21_s", "hollywood-2009_s"]
 
@@ -65,8 +75,7 @@ def bench(scale: float = 0.05, runs: int = 3, quiet: bool = False,
         row: dict[str, dict] = {}
         for mode, fn in MODES.items():
             warm = fn(g)                      # compile + TTI capture
-            v = validate_coloring(g, warm.colors)
-            assert v["conflicts"] == 0 and v["uncolored"] == 0, (name, mode)
+            verify_coloring(g, warm.colors, context=f"{name}/{mode}")
             best = min(fn(g).total_seconds for _ in range(runs))
             row[mode] = {
                 "seconds": best,
@@ -129,8 +138,7 @@ def bench_dist(shards: tuple[int, ...] = (1, 2, 8), scale: float = 0.02,
             fn = lambda: color_distributed(g, n_shards=s,    # noqa: E731
                                            steps_cache=cache)
             warm = fn()                                      # compile
-            v = validate_coloring(g, warm.colors)
-            assert v["conflicts"] == 0 and v["uncolored"] == 0, (name, s)
+            verify_coloring(g, warm.colors, context=f"{name}/shards_{s}")
             row[f"shards_{s}"] = {
                 "seconds": min(fn().total_seconds for _ in range(runs)),
                 "iterations": warm.iterations,
@@ -141,6 +149,82 @@ def bench_dist(shards: tuple[int, ...] = (1, 2, 8), scale: float = 0.02,
         if not quiet:
             print(csv_row(name, *(f"{row[k]['seconds'] * 1e3:.2f}"
                                   for k in row)))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        if not quiet:
+            print(f"# wrote {out_path}")
+    return report
+
+
+def bench_algos(shards: int = 2, scale: float = 0.02, runs: int = 2,
+                quiet: bool = False,
+                out_path: str | None = "BENCH_algos.json") -> dict:
+    """Algorithm x execution-mode matrix: seconds, color count, iterations.
+
+    Every registered algorithm runs under every execution mode it declares
+    (DESIGN.md §7): host-loop Pipe, device-resident outlined Pipe, and —
+    for shard-safe algorithms — the sharded Pipe on ``shards`` devices.
+    Each cell's coloring is verified (verify_coloring raises on an invalid
+    or incomplete result — a silent quality regression cannot ship a
+    number). Requires ``jax.device_count() >= shards`` for the dist cells
+    (the CLI re-execs with forced host devices when short).
+    """
+    import jax
+
+    from repro.algos import algorithm_names, get_algorithm
+    from repro.core.distributed import color_distributed
+    from repro.graphs import make_graph
+
+    assert jax.device_count() >= shards, (
+        f"need {shards} devices for the dist cells, have "
+        f"{jax.device_count()} — run via --algos so the CLI re-execs with "
+        "forced host devices")
+    report: dict = {"scale": scale, "runs": runs, "shards": shards,
+                    "backend": jax.default_backend(), "graphs": {}}
+    for name in DIST_GRAPHS:
+        g = make_graph(name, scale=scale)
+        row: dict[str, dict] = {}
+        for algo in algorithm_names():
+            alg = get_algorithm(algo)
+            cells: dict[str, dict] = {}
+            exec_modes = {
+                "host": dict(outline=False),
+                "outlined": dict(outline=True),
+                "dist-hybrid": dict(mode="dist-hybrid", n_shards=shards),
+            }
+            for emode, kw in exec_modes.items():
+                if emode == "dist-hybrid" and not alg.shard_safe:
+                    cells[emode] = {"unsupported": alg.shard_unsafe_reason}
+                    continue
+                if emode == "dist-hybrid":
+                    # steps_cache so timed repeats reuse the jitted
+                    # shard_map steps (same warm-timing discipline as
+                    # bench_dist; without it the cell measures retracing)
+                    cache: dict = {}
+                    fn = lambda: color_distributed(           # noqa: E731
+                        g, n_shards=shards, algo=algo, steps_cache=cache)
+                else:
+                    fn = lambda: color(g, algo=algo,          # noqa: E731
+                                       **({"mode": "hybrid"} | kw))
+                warm = fn()                       # compile
+                verify_coloring(g, warm.colors, context=f"{algo}/{emode}")
+                alg.check_invariants(warm, g)
+                cells[emode] = {
+                    "seconds": min(fn().total_seconds for _ in range(runs)),
+                    "n_colors": warm.n_colors,
+                    "iterations": warm.iterations,
+                    "host_dispatches": warm.host_dispatches,
+                }
+            row[algo] = cells
+        report["graphs"][name] = row
+        if not quiet:
+            for algo, cells in row.items():
+                print(csv_row(name, algo,
+                              *(f"{c['seconds'] * 1e3:.2f}ms/"
+                                f"{c['n_colors']}c"
+                                if "seconds" in c else "n/a"
+                                for c in cells.values())))
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=1)
@@ -182,12 +266,32 @@ def main() -> None:
                     help="bench the sharded Pipe across --shards")
     ap.add_argument("--shards", default="1,2,8")
     ap.add_argument("--dist-out", default="BENCH_dist.json")
+    ap.add_argument("--algos", action="store_true",
+                    help="algorithm x execution-mode matrix "
+                         "-> BENCH_algos.json")
+    ap.add_argument("--algos-shards", type=int, default=2,
+                    help="shard count for the --algos dist-hybrid cells")
+    ap.add_argument("--algos-out", default="BENCH_algos.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI fast path: tiny scale, 1 run, no JSON for the "
-                         "host bench, dist bench on 1,2,8 shards")
+                         "host bench, dist bench on 1,2,8 shards (or the "
+                         "algos matrix when combined with --algos)")
     args = ap.parse_args()
     shards = tuple(int(s) for s in args.shards.split(","))
 
+    if args.algos:
+        import jax
+        a_scale, a_runs = (0.01, 1) if args.smoke else (args.scale,
+                                                        args.runs)
+        if jax.device_count() < args.algos_shards:
+            sys.exit(_reexec_with_devices(
+                ["--algos", "--scale", str(a_scale), "--runs", str(a_runs),
+                 "--algos-shards", str(args.algos_shards),
+                 "--algos-out", args.algos_out], args.algos_shards))
+        print(csv_row("graph", "algo", "host", "outlined", "dist-hybrid"))
+        bench_algos(shards=args.algos_shards, scale=a_scale, runs=a_runs,
+                    out_path=args.algos_out)
+        return
     if args.smoke:
         import jax
         bench(scale=0.01, runs=1, out_path=None)

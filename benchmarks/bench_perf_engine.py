@@ -16,8 +16,8 @@ from __future__ import annotations
 import argparse
 
 from benchmarks.common import csv_row, geomean
-from repro.core import color, ipgc
-from repro.graphs import make_suite, validate_coloring
+from repro.core import color, ipgc, verify_coloring
+from repro.graphs import make_suite
 
 
 def _time(g, runs=3, **kw):
@@ -40,8 +40,7 @@ def bench(scale: float = 0.15, runs: int = 3, quiet=False):
             ipgc.set_force_hub(force)
             results[label][name] = _time(g, runs=runs, mode="hybrid", **kw)
             r = color(g, mode="hybrid", **kw)
-            v = validate_coloring(g, r.colors)
-            assert v["conflicts"] == 0 and v["uncolored"] == 0
+            verify_coloring(g, r.colors, context=f"{name}/{label}")
         # the paper's Plain baseline under the SAME final optimisations
         ipgc.set_force_hub(False)
         plains[name] = _time(g, runs=runs, mode="data", window="auto",

@@ -10,8 +10,8 @@ from __future__ import annotations
 import argparse
 
 from benchmarks.common import csv_row, geomean
-from repro.core import color, jpl_color, vb_color
-from repro.graphs import make_suite, validate_coloring
+from repro.core import color, jpl_color, vb_color, verify_coloring
+from repro.graphs import make_suite
 
 
 def bench(scale: float = 0.1, runs: int = 3, names=None, quiet=False):
@@ -32,8 +32,7 @@ def bench(scale: float = 0.1, runs: int = 3, names=None, quiet=False):
             best = min(fn().total_seconds for _ in range(runs))
             results[label] = best * 1e3
             r = fn()
-            v = validate_coloring(g, r.colors)
-            assert v["conflicts"] == 0 and v["uncolored"] == 0, (name, label)
+            verify_coloring(g, r.colors, context=f"{name}/{label}")
         sp_h = results["plain"] / results["hybrid"]
         sp_v = results["vb_kokkos"] / results["hybrid"]
         speedups_hybrid.append(sp_h)

@@ -1,0 +1,208 @@
+"""``jpl`` — Luby-style random-priority independent-set coloring as a
+worklist algorithm (Jones–Plassmann–Luby; what cuSPARSE's ``csrcolor``
+implements).
+
+Each round r draws a fresh random priority per *active* node (splitmix
+hash of (node id, r)); nodes beating every active neighbour join the
+max-independent-set and take color 2r, nodes strictly below every active
+neighbour take 2r+1 (the two-sided trick — two color classes per round).
+There is NO conflict-resolve phase: independent-set membership is decided
+before coloring, so a round's assignments are final. The trade-off is
+color quality — many more classes than IPGC's speculative mex
+(reproducing the paper's Table IV gap) — against very cheap rounds.
+
+Under the protocol both phases maintain the persistent dual worklist
+(active = still uncolored), so the hybrid Pipe drives JPL exactly like
+IPGC: topology-driven rounds while the active set is large, data-driven
+gathered rounds once it thins, chunked outlining on device. The round
+counter is the algorithm's ``aux`` state (a traced int32 scalar — it
+rides through ``lax.while_loop`` chunks unchanged).
+
+Per-phase communication profile (asserted in tests/test_algos.py):
+
+  * dense round: ZERO gathers of the mutable colors array — neighbour
+    activity is read from the priority vector, which encodes it.
+  * sparse round: exactly ONE ELL-shaped colors gather (activity of
+    neighbours outside the worklist is only knowable from colors).
+
+``impl="pallas"`` routes the row-wise priority-extrema reduction through
+``kernels/jpl_prio.py``; ``impl="jnp"`` is the reference reduction.
+
+The color palette has per-round gaps (a round may confirm only one of its
+two classes), so ``finalize`` compacts it to dense 0..k-1 labels and
+reports the true distinct count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algos.base import Algorithm, _compact_palette
+from repro.core import ipgc
+from repro.core.worklist import Worklist, compact_items, compact_mask, \
+    full_worklist
+from repro.graphs.csr import NO_COLOR
+
+LARGE = jnp.int32(0x7FFFFFFF)
+
+
+def round_hash(x: jax.Array, r: jax.Array) -> jax.Array:
+    """Per-round priority (uint32 splitmix-ish, positive int32) — the same
+    mixer as ``baselines._round_hash`` so JPL results stay comparable."""
+    x = x.astype(jnp.uint32) + jnp.uint32(0x9E3779B9) * (r.astype(jnp.uint32)
+                                                         + 1)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return (x >> 1).astype(jnp.int32)
+
+
+def _extrema(npr: jax.Array, impl: str) -> tuple[jax.Array, jax.Array]:
+    """Row-wise (max, masked-min) active-neighbour priority reduction."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.jpl_extrema(npr)
+    nbr_max = npr.max(axis=1)
+    nbr_min = jnp.where(npr >= 0, npr, LARGE).min(axis=1)
+    return nbr_max, nbr_min
+
+
+def _hub_extrema(ig: ipgc.IPGCGraph, tpr: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """(n_hub+1,) per-hub-slot tail-priority extrema; row n_hub is the
+    neutral row non-hub nodes gather (max -1 / min LARGE)."""
+    nh = ig.n_hub
+    hmax = jnp.full((nh + 1,), -1, jnp.int32).at[ig.tail_slot].max(tpr)
+    hmin = jnp.full((nh + 1,), LARGE).at[ig.tail_slot].min(
+        jnp.where(tpr >= 0, tpr, LARGE))
+    return hmax, hmin
+
+
+def _decide(pend, pr, nbr_max, nbr_min, rnd, cu):
+    """Two-sided independent-set membership -> new colors + newly flags."""
+    is_max = pend & (pr > nbr_max)
+    is_min = pend & (pr < nbr_min) & ~is_max
+    newly = is_max | is_min
+    new_c = jnp.where(is_max, 2 * rnd,
+                      jnp.where(is_min, 2 * rnd + 1, cu))
+    return new_c, newly
+
+
+def jpl_dense_step_impl(ig: ipgc.IPGCGraph, colors: jax.Array,
+                        rnd: jax.Array, wl: Worklist, *, window: int = 128,
+                        impl: str = "jnp", force_hub: bool | None = None
+                        ) -> tuple[jax.Array, jax.Array, Worklist]:
+    """One topology-driven JPL round over all N rows (``window`` is part of
+    the protocol signature but JPL has no mex window — ignored)."""
+    n = ig.n_nodes
+    active = wl.mask
+    ids = jnp.arange(n, dtype=jnp.int32)
+    cu = colors[:n]
+    pend = active & (cu == NO_COLOR)
+    pr = jnp.where(pend, round_hash(ids, rnd), -1)
+    pr_ext = jnp.concatenate([pr, jnp.full((1,), -1, jnp.int32)])
+
+    npr = pr_ext[ig.ell_idx]              # (N, K); pad lanes -> -1
+    nbr_max, nbr_min = _extrema(npr, impl)
+    if ipgc._has_hubs(ig, force_hub):
+        tpr = jnp.where(ig.tail_valid, pr_ext[ig.tail_dst], -1)
+        hmax, hmin = _hub_extrema(ig, tpr)
+        slot = jnp.minimum(ig.hub_slot, ig.n_hub)
+        nbr_max = jnp.maximum(nbr_max, hmax[slot])
+        nbr_min = jnp.minimum(nbr_min, hmin[slot])
+
+    new_c, newly = _decide(pend, pr, nbr_max, nbr_min, rnd, cu)
+    colors2 = colors.at[:n].set(new_c)
+
+    still = active & ~newly
+    items, count = compact_mask(still, wl.items.shape[0], n)
+    return colors2, rnd + 1, Worklist(mask=still, items=items, count=count)
+
+
+def jpl_sparse_step_impl(ig: ipgc.IPGCGraph, colors: jax.Array,
+                         rnd: jax.Array, wl: Worklist, *, window: int = 128,
+                         impl: str = "jnp", force_hub: bool | None = None
+                         ) -> tuple[jax.Array, jax.Array, Worklist]:
+    """One data-driven JPL round over the gathered C-item worklist.
+
+    Neighbour activity must be read from the colors vector here (a
+    neighbour that left the worklist long ago is invisible to the items
+    block) — the ONE colors gather of the sparse round.
+    """
+    n = ig.n_nodes
+    items = wl.items
+    valid = items < n
+    safe = jnp.where(valid, items, 0)
+    ids = jnp.where(valid, items, n)
+
+    cu = colors[ids]                      # pad -> PAD_COLOR
+    pend = valid & (cu == NO_COLOR)
+    pr = jnp.where(pend, round_hash(items, rnd), -1)
+
+    ell_rows = jnp.where(valid[:, None], ig.ell_idx[safe], n)    # (C, K)
+    nc = ipgc._gather_neighbor_colors(colors, ell_rows)
+    npr = jnp.where(nc == NO_COLOR, round_hash(ell_rows, rnd), -1)
+    nbr_max, nbr_min = _extrema(npr, impl)
+    if ipgc._has_hubs(ig, force_hub):
+        tc = colors[ig.tail_dst]
+        tpr = jnp.where(ig.tail_valid & (tc == NO_COLOR),
+                        round_hash(ig.tail_dst, rnd), -1)
+        hmax, hmin = _hub_extrema(ig, tpr)
+        slot = jnp.minimum(ig.hub_slot[safe], ig.n_hub)
+        nbr_max = jnp.maximum(nbr_max, jnp.where(valid, hmax[slot], -1))
+        nbr_min = jnp.minimum(nbr_min, jnp.where(valid, hmin[slot], LARGE))
+
+    new_c, newly = _decide(pend, pr, nbr_max, nbr_min, rnd, cu)
+    colors2 = colors.at[ids].set(jnp.where(valid, new_c, colors[ids]),
+                                 mode="drop")
+
+    still = pend & ~newly
+    new_items, count = compact_items(items, still, n)
+    mask = wl.mask.at[ids].set(still, mode="drop")
+    return colors2, rnd + 1, Worklist(mask=mask, items=new_items, count=count)
+
+
+_JPL_STATICS = ("window", "impl", "force_hub")
+jpl_dense_step = jax.jit(jpl_dense_step_impl, static_argnames=_JPL_STATICS)
+jpl_sparse_step = jax.jit(jpl_sparse_step_impl, static_argnames=_JPL_STATICS)
+
+
+@dataclasses.dataclass(frozen=True)
+class JPL(Algorithm):
+    name: str = "jpl"
+    shard_safe: bool = False
+    shard_unsafe_reason: str = (
+        "independent-set extraction needs neighbour *activity*, which only "
+        "the colors vector carries across shards; a shard-local round would "
+        "need a second replicated activity exchange per round — not yet "
+        "implemented (the declaration contract, DESIGN.md §7)")
+    uses_window: bool = False
+
+    def init_state(self, ig):
+        return (ipgc.init_colors(ig.n_nodes),
+                jnp.zeros((), dtype=jnp.int32),   # the round counter
+                full_worklist(ig.n_nodes))
+
+    def step_impls(self, fused: bool):
+        # a JPL round is already single-phase; fused == two-phase here
+        return jpl_dense_step_impl, jpl_sparse_step_impl
+
+    def step_fns(self, fused: bool):
+        return jpl_dense_step, jpl_sparse_step
+
+    def resolve_fused(self, fused, *, default):
+        return False                      # single step family
+
+    def finalize(self, colors):
+        return _compact_palette(colors)
+
+    def check_invariants(self, result, g=None):
+        super().check_invariants(result, g)
+        # each round confirms at most two color classes
+        assert result.n_colors <= 2 * max(result.iterations, 1), (
+            f"jpl: {result.n_colors} colors from {result.iterations} rounds")

@@ -46,7 +46,7 @@ from repro.core import ipgc
 from repro.core.engine import ColoringResult, adaptive_window
 from repro.core.policy import AutoTuned, Policy, Timer, make_policy
 from repro.core.worklist import (Worklist, bucket_capacities, compact_items,
-                                 full_worklist, pick_bucket, resize_block)
+                                 pick_bucket, resize_block)
 from repro.graphs.csr import Graph, NO_COLOR, PAD_COLOR
 from repro.graphs.partition import prepare_partition
 
@@ -358,6 +358,7 @@ def color_distributed(
     mesh=None,
     node_axes: tuple = ("data",),
     mode: str = "hybrid",
+    algo: str | object = "ipgc",
     h: float = 0.6,
     window: int | str = "auto",
     bucket_ratio: int = 2,
@@ -383,14 +384,22 @@ def color_distributed(
     node labeling.
 
     ``fused=None`` resolves to the distributed default (True).
+    ``algo`` must name a shard-safe algorithm (the declaration contract,
+    DESIGN.md §7); its ``make_dist_steps`` supplies the shard_map'd step
+    pair and its ``init_state``/``finalize`` bracket the run.
     ``steps_cache``: pass the same dict across calls to reuse the
     partitioned graph and the jitted shard_map steps (each call otherwise
     builds fresh jit closures, so repeat colorings of the same graph —
     and warm benchmark timings — would re-trace from scratch).
     """
+    from repro.algos import get_algorithm
+    alg = get_algorithm(algo)
+    if not alg.shard_safe:
+        raise ValueError(
+            f"algorithm {alg.name!r} is not shard-safe: "
+            f"{alg.shard_unsafe_reason or 'no distributed steps'}")
     assert isinstance(g, Graph), "color_distributed needs a host Graph"
-    if fused is None:
-        fused = True
+    fused = alg.resolve_fused(fused, default=True)
     custom_mesh = mesh is not None
     if mesh is None:
         if n_shards is None:
@@ -399,21 +408,22 @@ def color_distributed(
     else:
         n_shards = math.prod(mesh.shape[a] for a in node_axes)
     # auto-built meshes over the same device set are interchangeable; a
-    # caller-provided mesh is cached by identity (steps close over it)
+    # caller-provided mesh is cached by identity (steps close over it).
+    # The algorithm is keyed by the (frozen, hashable) instance, not its
+    # name: two tuned variants sharing a name must not share cached steps.
     key = (g.name, g.n_nodes, g.n_edges, n_shards, node_axes, window,
-           priority, fused, balance, id(mesh) if custom_mesh else None)
+           priority, fused, balance, alg,
+           id(mesh) if custom_mesh else None)
     if steps_cache is not None and key in steps_cache:
         (g2, new_of_old, ig, window, dense_fn, sparse_fn,
          resize_fn) = steps_cache[key]
     else:
         g2, new_of_old = prepare_partition(g, n_shards, balance=balance)
         if window == "auto":
-            window = adaptive_window(g2)
-        ig = ipgc.prepare(g2, priority=priority)
-        dense_fn = make_dist_dense_step(ig, mesh, node_axes, window=window,
-                                        fused=fused)
-        sparse_fn = make_dist_sparse_step(ig, mesh, node_axes, window=window,
-                                          fused=fused)
+            window = adaptive_window(g2) if alg.uses_window else 128
+        ig = alg.prepare(g2, priority=priority)
+        dense_fn, sparse_fn = alg.make_dist_steps(
+            ig, mesh, node_axes, window=window, fused=fused)
         resize_fn = make_dist_resize(mesh, node_axes, ig.n_nodes)
         if steps_cache is not None:
             steps_cache[key] = (g2, new_of_old, ig, window, dense_fn,
@@ -423,9 +433,8 @@ def color_distributed(
     pol = policy or make_policy(mode, h)
     caps = bucket_capacities(block, ratio=bucket_ratio)  # per-shard ladder
 
-    colors = ipgc.init_colors(n)
-    base = jnp.zeros((n,), dtype=jnp.int32)
-    wl = full_worklist(n)          # per-shard blocks == arange slices
+    colors, base, wl = alg.init_state(ig)
+    # per-shard blocks == arange slices of the full worklist
     count = n
 
     trace: list[str] = []
@@ -456,7 +465,7 @@ def color_distributed(
     total = time.perf_counter() - t_start
     full = np.asarray(colors[:n])
     final = full[new_of_old[:g.n_nodes]]   # back to original labels
-    n_colors = int(final.max()) + 1 if final.size else 0
+    final, n_colors = alg.finalize(final)
     return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
                           mode_trace="".join(trace), counts=counts, tti=tti,
                           total_seconds=total, host_dispatches=it)

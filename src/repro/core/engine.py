@@ -1,5 +1,10 @@
 """Hybrid coloring engine — the host-side analogue of IrGL's ``Pipe``.
 
+The engine is algorithm-generic (DESIGN.md §7): every entry point takes
+``algo=`` (a registry name or ``Algorithm`` instance; default ``"ipgc"``,
+bit-identical to the pre-subsystem engine) and threads the algorithm's
+steps and opaque ``aux`` state through the same Pipe machinery.
+
 Two dispatch regimes (DESIGN.md §4):
 
 * ``color`` — the host-loop Pipe: the device never sees dynamic shapes; the
@@ -83,6 +88,7 @@ def color(
     g: Graph | ipgc.IPGCGraph,
     *,
     mode: str = "hybrid",
+    algo: str | object = "ipgc",  # registry name or Algorithm instance
     h: float = 0.6,
     window: int | str = "auto",   # paper-faithful: 128 (EXPERIMENTS §Perf A)
     impl: str = "jnp",
@@ -98,37 +104,41 @@ def color(
     outline: bool | None = None,  # None -> set_outline_default()/env default
     n_shards: int | None = None,  # dist-* modes: shard count (None = all)
 ) -> ColoringResult:
+    # lazy: repro.algos imports this package's submodules at import time
+    from repro.algos import get_algorithm
+    alg = get_algorithm(algo)
     if mode.startswith("dist-"):
         # sharded Pipe (shard_map steps over owner blocks); lazy import —
         # distributed.py itself imports this module for the result type
         from repro.core.distributed import color_distributed
         assert isinstance(g, Graph), "distributed modes need a host Graph"
         return color_distributed(
-            g, n_shards=n_shards, mode=mode, h=h, window=window,
+            g, n_shards=n_shards, mode=mode, algo=alg, h=h, window=window,
             bucket_ratio=bucket_ratio, max_iter=max_iter, priority=priority,
             policy=policy, collect_tti=collect_tti, fused=fused)
     if outline is None:
         outline = outline_default()
     if outline:
         return color_outlined_hybrid(
-            g, mode=mode, h=h, window=window, impl=impl,
+            g, mode=mode, algo=alg, h=h, window=window, impl=impl,
             bucket_ratio=bucket_ratio, max_iter=max_iter, priority=priority,
             policy=policy, collect_tti=collect_tti, fused=fused)
-    if fused is None:
-        fused = False                  # host-loop default: two-phase steps
+    # host-loop default: two-phase steps (the algorithm may pin a family)
+    fused = alg.resolve_fused(fused, default=False)
     if window == "auto":
-        assert isinstance(g, Graph)
-        window = adaptive_window(g)
-    ig = ipgc.prepare(g, priority=priority) if isinstance(g, Graph) else g
+        if alg.uses_window:
+            assert isinstance(g, Graph)
+            window = adaptive_window(g)
+        else:
+            window = 128               # inert static arg (e.g. JPL)
+    ig = alg.prepare(g, priority=priority) if isinstance(g, Graph) else g
     n = ig.n_nodes
     pol = policy or make_policy(mode, h)
     caps = bucket_capacities(n, ratio=bucket_ratio)
     force_hub = ipgc.force_hub_enabled()
-    dense_fn, sparse_fn = ipgc.step_fns(fused)
+    dense_fn, sparse_fn = alg.step_fns(fused)
 
-    colors = ipgc.init_colors(n)
-    base = jnp.zeros((n,), dtype=jnp.int32)
-    wl = full_worklist(n)
+    colors, aux, wl = alg.init_state(ig)
     count = n
 
     trace: list[str] = []
@@ -141,15 +151,15 @@ def color(
         counts.append(count)
         with Timer() as t:
             if use_dense:
-                colors, base, wl = dense_fn(
-                    ig, colors, base, wl, window=window, impl=impl,
+                colors, aux, wl = dense_fn(
+                    ig, colors, aux, wl, window=window, impl=impl,
                     force_hub=force_hub)
             else:
                 cap = pick_bucket(caps, count)
                 if wl.capacity > cap:
                     wl = resize_items(wl, cap, n)
-                colors, base, wl = sparse_fn(
-                    ig, colors, base, wl, window=window, impl=impl,
+                colors, aux, wl = sparse_fn(
+                    ig, colors, aux, wl, window=window, impl=impl,
                     force_hub=force_hub)
             count = int(wl.count)  # the Pipe's single scalar read-back
         trace.append("D" if use_dense else "S")
@@ -160,8 +170,7 @@ def color(
         it += 1
 
     total = time.perf_counter() - t_start
-    final = np.asarray(colors[:n])
-    n_colors = int(final.max()) + 1 if final.size else 0
+    final, n_colors = alg.finalize(np.asarray(colors[:n]))
     return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
                           mode_trace="".join(trace), counts=counts, tti=tti,
                           total_seconds=total, host_dispatches=it)
@@ -171,13 +180,16 @@ def color(
 # device-resident hybrid Pipe (iteration outlining with bucket exits)
 # ---------------------------------------------------------------------------
 
-def _chunk_impl(ig, colors, base, wl, thresh, low, max_iter, it0, nd0, ns0,
-                *, window: int, impl: str, fused: bool, force_hub: bool,
-                branch: str):
+def _chunk_impl(ig, colors, aux, wl, thresh, low, max_iter, it0, nd0, ns0,
+                *, algo=None, window: int, impl: str, fused: bool,
+                force_hub: bool, branch: str):
     """One device program: while_loop over hybrid iterations at a static
     capacity bucket. Each trip picks dense vs sparse via ``lax.cond`` on the
     on-device count; the loop exits when the count crosses ``low`` (the next
     bucket boundary) so the host can re-dispatch at a smaller static shape.
+
+    ``algo`` is a static (hashable) Algorithm whose step impls trace into
+    the loop body; ``None`` resolves to IPGC — the pre-subsystem jaxpr.
 
     ``branch`` is a host-side specialisation: when the whole chunk provably
     runs one mode (its count range ``(low, cap]`` sits entirely on one side
@@ -185,9 +197,13 @@ def _chunk_impl(ig, colors, base, wl, thresh, low, max_iter, it0, nd0, ns0,
     flip), the conditional is compiled out so XLA sees a straight-line loop
     body.
     """
-    dense_fn = ipgc.fused_dense_step_impl if fused else ipgc.dense_step_impl
-    sparse_fn = (ipgc.fused_sparse_step_impl if fused
-                 else ipgc.sparse_step_impl)
+    if algo is None:
+        dense_fn = (ipgc.fused_dense_step_impl if fused
+                    else ipgc.dense_step_impl)
+        sparse_fn = (ipgc.fused_sparse_step_impl if fused
+                     else ipgc.sparse_step_impl)
+    else:
+        dense_fn, sparse_fn = algo.step_impls(fused)
     step_kw = dict(window=window, impl=impl, force_hub=force_hub)
 
     def cond(state):
@@ -195,36 +211,38 @@ def _chunk_impl(ig, colors, base, wl, thresh, low, max_iter, it0, nd0, ns0,
         return (wl.count > 0) & (it < max_iter) & (wl.count > low)
 
     def body(state):
-        colors, base, wl, it, nd, ns = state
+        colors, aux, wl, it, nd, ns = state
         if branch == "dense":
             use_dense = jnp.asarray(True)
-            colors, base, wl = dense_fn(ig, colors, base, wl, **step_kw)
+            colors, aux, wl = dense_fn(ig, colors, aux, wl, **step_kw)
         elif branch == "sparse":
             use_dense = jnp.asarray(False)
-            colors, base, wl = sparse_fn(ig, colors, base, wl, **step_kw)
+            colors, aux, wl = sparse_fn(ig, colors, aux, wl, **step_kw)
         else:
             use_dense = wl.count > thresh
-            colors, base, wl = jax.lax.cond(
+            colors, aux, wl = jax.lax.cond(
                 use_dense,
                 lambda c, b, w: dense_fn(ig, c, b, w, **step_kw),
                 lambda c, b, w: sparse_fn(ig, c, b, w, **step_kw),
-                colors, base, wl)
+                colors, aux, wl)
         d = use_dense.astype(jnp.int32)
-        return colors, base, wl, it + 1, nd + d, ns + (1 - d)
+        return colors, aux, wl, it + 1, nd + d, ns + (1 - d)
 
     return jax.lax.while_loop(
-        cond, body, (colors, base, wl, it0, nd0, ns0))
+        cond, body, (colors, aux, wl, it0, nd0, ns0))
 
 
 _hybrid_chunk = jax.jit(
     _chunk_impl,
-    static_argnames=("window", "impl", "fused", "force_hub", "branch"))
+    static_argnames=("algo", "window", "impl", "fused", "force_hub",
+                     "branch"))
 
 
 def color_outlined_hybrid(
     g: Graph | ipgc.IPGCGraph,
     *,
     mode: str = "hybrid",
+    algo: str | object = "ipgc",
     h: float = 0.6,
     window: int | str = "auto",
     impl: str = "jnp",
@@ -255,21 +273,30 @@ def color_outlined_hybrid(
     resolve costs a few extra iterations — a bad trade on the CPU jnp path,
     where the forbidden-bitmap scatter dominates (DESIGN.md §5).
     """
-    if fused is None:
-        fused = jax.default_backend() == "tpu"
+    from repro.algos import get_algorithm
+    from repro.algos.ipgc_algo import IPGC
+    alg = get_algorithm(algo)
+    fused = alg.resolve_fused(fused, default=jax.default_backend() == "tpu")
     if window == "auto":
-        assert isinstance(g, Graph)
-        window = adaptive_window(g)
-    ig = ipgc.prepare(g, priority=priority) if isinstance(g, Graph) else g
+        if alg.uses_window:
+            assert isinstance(g, Graph)
+            window = adaptive_window(g)
+        else:
+            window = 128               # inert static arg (e.g. JPL)
+    ig = alg.prepare(g, priority=priority) if isinstance(g, Graph) else g
     n = ig.n_nodes
     pol = policy or make_policy(mode, h)
     caps = bucket_capacities(n, ratio=bucket_ratio)
     lows = chunk_lower_bounds(caps)
     force_hub = ipgc.force_hub_enabled()
+    # None keeps the pre-subsystem IPGC jit specialisation (bit-identical).
+    # Dataclass equality (not the name string) guards the substitution: a
+    # subclass or re-registered variant under the name "ipgc" compares
+    # unequal and traces through its own step impls.
+    algo_static = None if alg == IPGC() else alg
 
-    colors = ipgc.init_colors(n)
-    base = jnp.zeros((n,), dtype=jnp.int32)
-    wl = resize_items(full_worklist(n), caps[0], n)
+    colors, aux, wl = alg.init_state(ig)
+    wl = resize_items(wl, caps[0], n)
     count = n
 
     trace: list[str] = []
@@ -295,16 +322,16 @@ def color_outlined_hybrid(
         counts.append(count)
         dispatches += 1
         with Timer() as t:
-            colors, base, wl, it_dev, nd, ns = _hybrid_chunk(
-                ig, colors, base, wl,
+            colors, aux, wl, it_dev, nd, ns = _hybrid_chunk(
+                ig, colors, aux, wl,
                 jnp.asarray(thresh, jnp.int32),
                 jnp.asarray(lows[bi], jnp.int32),
                 jnp.asarray(max_iter, jnp.int32),
                 jnp.asarray(it, jnp.int32),
                 jnp.asarray(0, jnp.int32),
                 jnp.asarray(0, jnp.int32),
-                window=window, impl=impl, fused=fused, force_hub=force_hub,
-                branch=branch)
+                algo=algo_static, window=window, impl=impl, fused=fused,
+                force_hub=force_hub, branch=branch)
             count = int(wl.count)  # the chunk's single scalar read-back
         nd, ns, new_it = int(nd), int(ns), int(it_dev)
         trace.append("D" * nd + "S" * ns)
@@ -315,8 +342,7 @@ def color_outlined_hybrid(
         it = new_it
 
     total = time.perf_counter() - t_start
-    final = np.asarray(colors[:n])
-    n_colors = int(final.max()) + 1 if final.size else 0
+    final, n_colors = alg.finalize(np.asarray(colors[:n]))
     return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
                           mode_trace="".join(trace), counts=counts, tti=tti,
                           total_seconds=total, host_dispatches=dispatches)

@@ -1,0 +1,45 @@
+"""Shared coloring verification — the single checker benchmarks, tests and
+examples call instead of hand-rolling ``validate_coloring`` assertions.
+
+``validate_coloring`` (graphs/csr.py) *reports*; ``verify_coloring``
+*enforces*: it raises ``InvalidColoringError`` on any conflict edge or (by
+default) any uncolored node, with a message that names the offender, and
+returns the stats dict on success so call sites can keep using the counts.
+
+The error subclasses AssertionError so pytest reports it natively and
+pre-existing ``assert v["conflicts"] == 0`` call sites migrate without
+changing failure semantics.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import Graph, validate_coloring
+
+
+class InvalidColoringError(AssertionError):
+    """A coloring violated validity (conflict edge / uncolored node)."""
+
+
+def verify_coloring(g: Graph, colors: np.ndarray, *,
+                    require_complete: bool = True,
+                    context: str = "") -> dict:
+    """Verify ``colors`` is a proper (and, by default, complete) coloring
+    of ``g``; raise ``InvalidColoringError`` otherwise.
+
+    Returns ``validate_coloring``'s stats dict
+    (``{"conflicts", "uncolored", "n_colors"}``) on success.
+    ``context`` is prepended to the failure message (graph name, engine
+    mode, shard count — whatever the call site knows).
+    """
+    stats = validate_coloring(g, colors)
+    where = f"{context}: " if context else ""
+    if stats["conflicts"]:
+        raise InvalidColoringError(
+            f"{where}invalid coloring of {g.name!r}: "
+            f"{stats['conflicts']} conflicting edge(s)")
+    if require_complete and stats["uncolored"]:
+        raise InvalidColoringError(
+            f"{where}incomplete coloring of {g.name!r}: "
+            f"{stats['uncolored']} uncolored node(s)")
+    return stats

@@ -16,6 +16,7 @@ from repro.kernels.compact import compact_pallas
 from repro.kernels.conflict import conflict_pallas
 from repro.kernels.frontier import frontier_probe_pallas
 from repro.kernels.fused_step import fused_step_pallas
+from repro.kernels.jpl_prio import jpl_extrema_pallas
 from repro.kernels.mex_window import mex_window_pallas
 
 
@@ -47,6 +48,13 @@ def fused_step(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
     conflict check and the windowed mex (see kernels/fused_step.py)."""
     return fused_step_pallas(nc, npr, nbr_ids, base, cu, pu, ids, pending,
                              extra_forb, window, interpret=_interpret())
+
+
+@jax.jit
+def jpl_extrema(npr: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row (max, masked min) of active-neighbour JPL priorities (the
+    independent-set membership compare; see kernels/jpl_prio.py)."""
+    return jpl_extrema_pallas(npr, interpret=_interpret())
 
 
 @jax.jit

@@ -39,6 +39,15 @@ def fused_step_ref(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
     return lose, first
 
 
+def jpl_extrema_ref(npr: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Row-wise (max, masked min) of active-neighbour priorities; inactive
+    lanes are -1 on input, LARGE on the min side."""
+    large = jnp.int32(0x7FFFFFFF)
+    nbr_max = npr.max(axis=1)
+    nbr_min = jnp.where(npr >= 0, npr, large).min(axis=1)
+    return nbr_max, nbr_min
+
+
 def compact_ref(mask: jax.Array) -> tuple[jax.Array, jax.Array]:
     n = mask.shape[0]
     (idx,) = jnp.nonzero(mask, size=n, fill_value=n)

@@ -1,0 +1,39 @@
+"""Soft ``hypothesis`` dependency for the test suite.
+
+Four modules used to guard with a module-level
+``pytest.importorskip("hypothesis")``, which skipped the ENTIRE module —
+hiding ~25 example-based tests that never touch hypothesis whenever the
+optional dev dep is absent (the tier-1 "4 persistently-skipped tests").
+
+Importing ``given``/``settings``/``st`` from here instead keeps the
+example-based tests running everywhere; only the property-based tests
+skip, each with an explicit reason string, when hypothesis is missing.
+"""
+import pytest
+
+HYPOTHESIS_SKIP_REASON = (
+    "hypothesis not installed (optional dev dep, requirements-dev.txt); "
+    "property-based test skipped — example-based tests in this module "
+    "still run")
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Lets ``@given(st.integers(...))`` decorations evaluate; the
+        decorated test is skip-marked, so the stubs are never drawn."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*_a, **_k):
+        return lambda fn: pytest.mark.skip(reason=HYPOTHESIS_SKIP_REASON)(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn

@@ -1,9 +1,9 @@
-"""Hybrid direction-optimizing BFS (the paper's future work) vs oracle."""
+"""Hybrid direction-optimizing BFS (the paper's future work) vs oracle.
+Property tests skip individually when hypothesis is absent (see _hyp)."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 from repro.core.bfs import bfs, bfs_reference
 from repro.graphs import build_graph, make_graph

@@ -2,7 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core import color, jpl_color, vb_color, bucket_capacities
+from repro.core import (color, jpl_color, vb_color, bucket_capacities,
+                        verify_coloring)
 from repro.core.policy import make_policy, AutoTuned
 from repro.core.worklist import pick_bucket
 from repro.graphs import make_graph, validate_coloring, build_graph
@@ -19,9 +20,7 @@ def graphs():
 @pytest.mark.parametrize("name", GRAPHS)
 def test_engine_valid_coloring(graphs, name, mode):
     r = color(graphs[name], mode=mode)
-    v = validate_coloring(graphs[name], r.colors)
-    assert v["conflicts"] == 0
-    assert v["uncolored"] == 0
+    verify_coloring(graphs[name], r.colors, context=f"{name}/{mode}")
     assert r.n_colors >= 1
 
 
@@ -29,9 +28,7 @@ def test_engine_valid_coloring(graphs, name, mode):
 def test_baselines_valid(graphs, name):
     for fn in (jpl_color, vb_color):
         r = fn(graphs[name])
-        v = validate_coloring(graphs[name], r.colors)
-        assert v["conflicts"] == 0
-        assert v["uncolored"] == 0
+        verify_coloring(graphs[name], r.colors, context=name)
 
 
 def test_hybrid_switches_at_h(graphs):
@@ -129,6 +126,5 @@ def test_window_exhaustion_hub():
     s, d = np.meshgrid(np.arange(n), np.arange(n))
     g = build_graph(s.ravel(), d.ravel(), n, name="K200", ell_cap=64)
     r = color(g, mode="hybrid", window=128)
-    v = validate_coloring(g, r.colors)
-    assert v["conflicts"] == 0 and v["uncolored"] == 0
+    verify_coloring(g, r.colors)
     assert r.n_colors == n

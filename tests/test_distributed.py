@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import color, color_distributed, ipgc
+from repro.core import color, color_distributed, ipgc, verify_coloring
 from repro.core.distributed import (EXCHANGE_COUNTS, make_dist_dense_step,
                                     make_dist_sparse_step,
                                     reset_exchange_counts)
@@ -103,8 +103,8 @@ def test_color_distributed_multishard_subprocess():
     labeling), iteration count and mode trace — on >= 3 suite graphs."""
     code = """
 import jax, numpy as np
-from repro.core import color, color_distributed
-from repro.graphs import make_graph, validate_coloring
+from repro.core import color, color_distributed, verify_coloring
+from repro.graphs import make_graph
 from repro.graphs.partition import prepare_partition
 for name in ["europe_osm_s", "kron_g500-logn21_s", "hollywood-2009_s"]:
     g = make_graph(name, scale=0.01)
@@ -112,8 +112,7 @@ for name in ["europe_osm_s", "kron_g500-logn21_s", "hollywood-2009_s"]:
         r_d = color_distributed(g, n_shards=s)
         g2, relabel = prepare_partition(g, s)
         r_h = color(g2, mode="hybrid", fused=True, outline=False)
-        v = validate_coloring(g, r_d.colors)
-        assert v["conflicts"] == 0 and v["uncolored"] == 0, (name, s, v)
+        verify_coloring(g, r_d.colors, context=f"{name}/shards_{s}")
         np.testing.assert_array_equal(r_d.colors,
                                       r_h.colors[relabel[:g.n_nodes]])
         assert r_d.iterations == r_h.iterations, (name, s)
@@ -137,8 +136,7 @@ def test_dist_engine_full_run_valid():
         colors, base, wl = step(colors, base, wl)
         if int(wl.count) == 0:
             break
-    v = validate_coloring(g, np.asarray(colors[:n]))
-    assert v["conflicts"] == 0 and v["uncolored"] == 0
+    verify_coloring(g, np.asarray(colors[:n]))
 
 
 # ---------------------------------------------------------------------------
@@ -185,8 +183,7 @@ def test_color_distributed_matches_host_engine(name):
     r_d = color_distributed(g, n_shards=1)
     g2, relabel = prepare_partition(g, 1)
     r_h = color(g2, mode="hybrid", fused=True, outline=False)
-    v = validate_coloring(g, r_d.colors)
-    assert v["conflicts"] == 0 and v["uncolored"] == 0
+    verify_coloring(g, r_d.colors)
     np.testing.assert_array_equal(r_d.colors, r_h.colors[relabel[:g.n_nodes]])
     assert r_d.iterations == r_h.iterations
     assert r_d.mode_trace == r_h.mode_trace
@@ -199,8 +196,7 @@ def test_color_dist_mode_dispatch():
     run without rebuilding the jitted steps."""
     g = make_graph("kron_g500-logn21_s", scale=0.01)
     r = color(g, mode="dist-hybrid", n_shards=1)
-    v = validate_coloring(g, r.colors)
-    assert v["conflicts"] == 0 and v["uncolored"] == 0
+    verify_coloring(g, r.colors)
     np.testing.assert_array_equal(r.colors,
                                   color_distributed(g, n_shards=1).colors)
     r2p = color(g, mode="dist-hybrid", n_shards=1, fused=False)
@@ -222,8 +218,7 @@ def test_color_distributed_degenerate_policies():
     g = make_graph("europe_osm_s", scale=0.01)
     for mode in ("topology", "data"):
         r = color_distributed(g, n_shards=1, mode=mode)
-        v = validate_coloring(g, r.colors)
-        assert v["conflicts"] == 0 and v["uncolored"] == 0, mode
+        verify_coloring(g, r.colors, context=mode)
     assert set(color_distributed(g, n_shards=1, mode="topology").mode_trace) \
         == {"D"}
     assert set(color_distributed(g, n_shards=1, mode="data").mode_trace) \

@@ -1,12 +1,12 @@
 """Per-kernel validation: Pallas (interpret on CPU) vs pure-jnp oracle,
-swept over shapes/dtypes, plus hypothesis property tests."""
+swept over shapes/dtypes, plus hypothesis property tests (property tests
+skip individually, with a reason, when hypothesis is absent — see _hyp)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.compact import compact_pallas

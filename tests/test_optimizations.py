@@ -88,10 +88,9 @@ def test_flash_remat_reduces_residual_memory():
 
 
 def test_adaptive_window_preserves_validity():
-    from repro.core import color
-    from repro.graphs import make_graph, validate_coloring
+    from repro.core import color, verify_coloring
+    from repro.graphs import make_graph
     for name in ("europe_osm_s", "kron_g500-logn21_s"):
         g = make_graph(name, scale=0.02)
         r = color(g, mode="hybrid", window="auto")
-        v = validate_coloring(g, r.colors)
-        assert v["conflicts"] == 0 and v["uncolored"] == 0
+        verify_coloring(g, r.colors, context=name)

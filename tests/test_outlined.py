@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import color, color_outlined_hybrid, ipgc
+from repro.core import color, color_outlined_hybrid, ipgc, verify_coloring
 from repro.core.worklist import bucket_capacities, full_worklist
 from repro.graphs import build_graph, make_graph, validate_coloring
 
@@ -21,9 +21,7 @@ def graphs():
 
 
 def _assert_equivalent(g, r_host, r_out):
-    v = validate_coloring(g, r_out.colors)
-    assert v["conflicts"] == 0
-    assert v["uncolored"] == 0
+    verify_coloring(g, r_out.colors)
     np.testing.assert_array_equal(r_out.colors, r_host.colors)
     assert r_out.iterations == r_host.iterations
     assert r_out.n_colors == r_host.n_colors
@@ -120,8 +118,7 @@ def test_outlined_dispatch_bound(graphs, ratio):
 def test_outlined_hybrid_auto_policy(graphs):
     g = graphs["europe_osm_s"]
     r = color_outlined_hybrid(g, mode="hybrid-auto")
-    v = validate_coloring(g, r.colors)
-    assert v["conflicts"] == 0 and v["uncolored"] == 0
+    verify_coloring(g, r.colors)
 
 
 # ---------------------------------------------------------------------------
@@ -156,8 +153,7 @@ def test_fused_host_loop_valid_and_comparable_quality(graphs):
     for name, g in graphs.items():
         r2 = color(g, mode="hybrid", fused=False, outline=False)
         rf = color(g, mode="hybrid", fused=True, outline=False)
-        v = validate_coloring(g, rf.colors)
-        assert v["conflicts"] == 0 and v["uncolored"] == 0
+        verify_coloring(g, rf.colors, context=name)
         assert rf.n_colors <= 2 * r2.n_colors + 2, (name, rf.n_colors,
                                                     r2.n_colors)
 

@@ -1,11 +1,12 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants (each test skips with a
+reason when hypothesis is absent — see _hyp; this module is all-property,
+so without hypothesis every test here reports skipped, not hidden)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 from repro.core import color, jpl_color
 from repro.core.worklist import bucket_capacities, pick_bucket

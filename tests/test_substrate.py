@@ -6,18 +6,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 from repro.ckpt import (AsyncCheckpointer, latest_step, restore_checkpoint,
                         save_checkpoint)
 from repro.data.pipelines import RecsysPipeline, TokenPipeline
-from repro.dist import sharding as shd
-from repro.ft.elastic import StragglerMonitor, plan_mesh, survivors_mesh
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compression import (compress_init, dequantize_int8,
                                      quantize_int8)
+
+# The elasticity/sharding substrate modules are not part of this repo (the
+# seed ships the coloring substrate only); their tests skip with a recorded
+# reason instead of hiding the whole module behind an unconditional guard.
+try:
+    from repro.dist import sharding as shd
+    _HAVE_DIST_SHARDING = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_DIST_SHARDING = False
+try:
+    from repro.ft.elastic import StragglerMonitor, plan_mesh, survivors_mesh
+    _HAVE_FT_ELASTIC = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_FT_ELASTIC = False
+
+requires_dist_sharding = pytest.mark.skipif(
+    not _HAVE_DIST_SHARDING,
+    reason="repro.dist.sharding is not present in this repo (coloring "
+           "substrate seed); sharding-rule coverage test not runnable")
+requires_ft_elastic = pytest.mark.skipif(
+    not _HAVE_FT_ELASTIC,
+    reason="repro.ft.elastic is not present in this repo (coloring "
+           "substrate seed); elasticity tests not runnable")
 
 
 def _tree():
@@ -87,6 +107,7 @@ def test_data_pipeline_deterministic():
     assert r.batch_at(0)["sparse"].shape == (8, 3, 1)
 
 
+@requires_ft_elastic
 def test_elastic_mesh_planning():
     assert plan_mesh(512, model_parallel=16, pods=2) == (2, 16, 16)
     assert plan_mesh(256, model_parallel=16) == (16, 16)
@@ -95,6 +116,7 @@ def test_elastic_mesh_planning():
     assert survivors_mesh((2, 16, 16), list(range(8)), 4) == (2, 15, 16)
 
 
+@requires_ft_elastic
 def test_straggler_rebalance():
     mon = StragglerMonitor(n_hosts=4)
     for h, t in [(0, 1.0), (1, 1.0), (2, 1.0), (3, 2.0)]:
@@ -135,6 +157,7 @@ def test_compressed_psum_single_device():
                                atol=0.02)
 
 
+@requires_dist_sharding
 def test_sharding_rules_cover_all_logical_axes():
     rules = shd.make_rules(multi_pod=True)
     from repro.configs import ARCH_IDS, get_arch

@@ -1,0 +1,93 @@
+"""Worklist unit tests: resize_block boundary cases (count == capacity,
+count == 0, non-power-of-two capacities) + resize_items round trips."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.worklist import (Worklist, bucket_capacities, compact_mask,
+                                 full_worklist, resize_block, resize_items)
+
+N = 20
+
+
+def _block(live, capacity, n=N):
+    """Compacted items block: ``live`` ids then sentinel padding."""
+    pad = [n] * (capacity - len(live))
+    return jnp.asarray(list(live) + pad, jnp.int32)
+
+
+def test_resize_block_same_capacity_is_identity():
+    items = _block([3, 5, 7], 8)
+    out = resize_block(items, 8, N)
+    assert out is items                       # no copy on the no-op path
+
+
+def test_resize_block_count_equals_capacity():
+    # every slot live: shrinking to exactly the live count keeps them all
+    items = _block([2, 4, 6, 8, 10], 5)
+    out = resize_block(items, 5, N)
+    np.testing.assert_array_equal(np.asarray(out), [2, 4, 6, 8, 10])
+    # and growing from a full block pads with the sentinel only
+    grown = resize_block(items, 9, N)
+    np.testing.assert_array_equal(np.asarray(grown),
+                                  [2, 4, 6, 8, 10, N, N, N, N])
+
+
+def test_resize_block_shrink_to_live_count():
+    # live prefix of 3 in a capacity-8 block; ladder guarantees count <= cap
+    items = _block([1, 9, 17], 8)
+    out = resize_block(items, 3, N)
+    np.testing.assert_array_equal(np.asarray(out), [1, 9, 17])
+
+
+def test_resize_block_count_zero():
+    # an all-sentinel (drained) block resizes freely in both directions
+    items = _block([], 8)
+    for cap in (1, 3, 8, 13):
+        out = resize_block(items, cap, N)
+        assert out.shape == (cap,)
+        assert (np.asarray(out) == N).all()
+
+
+def test_resize_block_non_power_of_two_capacities():
+    # the bucket ladder is 8-aligned, not power-of-two; resize_block itself
+    # must work at ANY static capacity (shard-local ladders divide by rank)
+    items = _block([0, 5, 11], 10)
+    for cap in (3, 7, 10, 13, 25):
+        out = resize_block(items, cap, N)
+        assert out.shape == (cap,)
+        keep = min(cap, 3)
+        np.testing.assert_array_equal(np.asarray(out)[:keep],
+                                      [0, 5, 11][:keep])
+        assert (np.asarray(out)[3:] == N).all()
+
+
+def test_resize_block_grow_then_shrink_roundtrip():
+    items = _block([4, 8], 5)
+    back = resize_block(resize_block(items, 12, N), 5, N)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(items))
+
+
+def test_resize_items_preserves_mask_and_count():
+    wl = full_worklist(6)
+    small = resize_items(wl, 3, 6)         # slice: only valid while count<=3
+    assert small.items.shape == (3,)
+    assert int(small.count) == int(wl.count)
+    np.testing.assert_array_equal(np.asarray(small.mask),
+                                  np.asarray(wl.mask))
+    grown = resize_items(small, 11, 6)
+    np.testing.assert_array_equal(np.asarray(grown.items)[:3], [0, 1, 2])
+    assert (np.asarray(grown.items)[3:] == 6).all()
+
+
+def test_compact_mask_then_resize_consistency():
+    mask = jnp.asarray([True, False, True, False, False, True, False, True])
+    items, count = compact_mask(mask, 8, 8)
+    wl = Worklist(mask=mask, items=items, count=count)
+    out = resize_items(wl, 4, 8)           # count == capacity boundary
+    np.testing.assert_array_equal(np.asarray(out.items), [0, 2, 5, 7])
+
+
+def test_bucket_ladder_caps_are_8_aligned():
+    for n in (17, 1000, 12345):
+        for cap in bucket_capacities(n, ratio=3):
+            assert cap % 8 == 0
