@@ -32,8 +32,18 @@ reason string instead of numbers.
 
   PYTHONPATH=src python -m benchmarks.bench_engine_modes --algos
 
+``--layouts`` sweeps the staged graph pipeline (DESIGN.md §8): every
+registered reorder x every layout kind (plus the auto planner's pick) per
+graph, and writes ``BENCH_graphs.json`` with build time, the chosen
+layout kind, ELL width, coloring time and n_colors per cell. Every cell's
+coloring is verified on the ORIGINAL node ids (reorders map back through
+the inverse permutation before checking).
+
+  PYTHONPATH=src python -m benchmarks.bench_engine_modes --layouts
+
 ``--smoke`` is the CI fast path: tiny scale, one run, both engine families
-(combine with --algos for the algos matrix leg).
+(combine with --algos for the algos matrix leg, or --layouts for the
+pipeline sweep).
 """
 from __future__ import annotations
 
@@ -42,6 +52,8 @@ import json
 import os
 import subprocess
 import sys
+
+import numpy as np
 
 from benchmarks.common import csv_row, geomean
 from repro.core import color, color_outlined_hybrid, verify_coloring
@@ -233,6 +245,69 @@ def bench_algos(shards: int = 2, scale: float = 0.02, runs: int = 2,
     return report
 
 
+def bench_layouts(scale: float = 0.02, runs: int = 2, quiet: bool = False,
+                  out_path: str | None = "BENCH_graphs.json") -> dict:
+    """Reorder x layout matrix over the graph pipeline (DESIGN.md §8).
+
+    Per cell: pipeline build time, the resolved LayoutPlan (kind + ELL
+    width + tail entries), host-Pipe coloring seconds/iterations and
+    n_colors. Reordered cells verify their colors on the ORIGINAL node
+    ids via the inverse permutation — the pipeline's round-trip contract
+    rides every benchmark run, not just the test suite.
+    """
+    import time
+
+    from repro.graphs import LAYOUT_KINDS, REORDERINGS, get_dataset
+    from repro.graphs.registry import clear_dataset_cache
+
+    layouts = list(LAYOUT_KINDS) + ["auto"]
+    reorders = sorted(REORDERINGS)
+    report: dict = {"scale": scale, "runs": runs, "graphs": {}}
+    for name in DIST_GRAPHS:
+        g_orig = get_dataset(name, scale=scale, layout="ell-tail")
+        row: dict[str, dict] = {}
+        for ro in reorders:
+            for lay in layouts:
+                clear_dataset_cache()        # measure the real build cost
+                t0 = time.perf_counter()
+                try:
+                    g = get_dataset(name, scale=scale, reorder=ro,
+                                    layout=lay)
+                except ValueError as err:    # e.g. pure-ell cap conflicts
+                    row[f"{ro}/{lay}"] = {"unsupported": str(err)}
+                    continue
+                build_s = time.perf_counter() - t0
+                fn = lambda: color(g, mode="hybrid",    # noqa: E731
+                                   outline=False)
+                warm = fn()
+                back = (g.perm.colors_to_original(warm.colors)
+                        if g.perm is not None else warm.colors)
+                verify_coloring(g_orig, back, context=f"{name}/{ro}/{lay}")
+                row[f"{ro}/{lay}"] = {
+                    "build_seconds": round(build_s, 4),
+                    "layout": g.layout.kind,
+                    "ell_width": g.ell_width,
+                    "tail_entries": int(
+                        (np.asarray(g.arrays.tail_src) != g.n_nodes).sum()),
+                    "seconds": min(fn().total_seconds for _ in range(runs)),
+                    "iterations": warm.iterations,
+                    "n_colors": warm.n_colors,
+                }
+        report["graphs"][name] = row
+        if not quiet:
+            for cell, v in row.items():
+                print(csv_row(name, cell,
+                              (f"{v['seconds'] * 1e3:.2f}ms/"
+                               f"{v['n_colors']}c/K{v['ell_width']}"
+                               if "seconds" in v else "n/a")))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        if not quiet:
+            print(f"# wrote {out_path}")
+    return report
+
+
 def _reexec_with_devices(argv: list[str], n_devices: int) -> int:
     """Re-exec this module with forced host-platform devices (XLA binds the
     device count at first import, so it cannot be changed in-process).
@@ -266,6 +341,10 @@ def main() -> None:
                     help="bench the sharded Pipe across --shards")
     ap.add_argument("--shards", default="1,2,8")
     ap.add_argument("--dist-out", default="BENCH_dist.json")
+    ap.add_argument("--layouts", action="store_true",
+                    help="reorder x layout pipeline matrix "
+                         "-> BENCH_graphs.json")
+    ap.add_argument("--layouts-out", default="BENCH_graphs.json")
     ap.add_argument("--algos", action="store_true",
                     help="algorithm x execution-mode matrix "
                          "-> BENCH_algos.json")
@@ -279,6 +358,12 @@ def main() -> None:
     args = ap.parse_args()
     shards = tuple(int(s) for s in args.shards.split(","))
 
+    if args.layouts:
+        l_scale, l_runs = (0.01, 1) if args.smoke else (args.scale,
+                                                        args.runs)
+        print(csv_row("graph", "reorder/layout", "ms/colors/width"))
+        bench_layouts(scale=l_scale, runs=l_runs, out_path=args.layouts_out)
+        return
     if args.algos:
         import jax
         a_scale, a_runs = (0.01, 1) if args.smoke else (args.scale,

@@ -14,7 +14,7 @@ import argparse
 
 from repro.algos import algorithm_names, get_algorithm
 from repro.core import color, verify_coloring
-from repro.graphs import make_suite
+from repro.graphs import LAYOUT_KINDS, REORDERINGS, SUITE_SPECS, get_dataset
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=float, default=0.1)
@@ -24,6 +24,12 @@ ap.add_argument("--mode", default="hybrid",
                 help="policy mode (hybrid / topology / data / hybrid-auto)")
 ap.add_argument("--outline", action="store_true",
                 help="use the device-resident outlined Pipe")
+ap.add_argument("--layout", default="auto",
+                choices=list(LAYOUT_KINDS) + ["auto"],
+                help="graph pipeline layout plan (DESIGN.md §8)")
+ap.add_argument("--reorder", default="identity",
+                choices=sorted(REORDERINGS),
+                help="graph pipeline node reordering")
 ap.add_argument("--tables", action="store_true",
                 help="also reproduce the paper's Tables III & IV")
 args = ap.parse_args()
@@ -31,17 +37,25 @@ args = ap.parse_args()
 algos = args.algo or algorithm_names()
 
 print(f"== registry sweep: {', '.join(algos)} "
-      f"(mode={args.mode}, outline={args.outline}) ==")
-print("graph,algo,ms,iterations,colors")
-for name, g in make_suite(scale=args.scale).items():
+      f"(mode={args.mode}, outline={args.outline}, layout={args.layout}, "
+      f"reorder={args.reorder}) ==")
+print("graph,layout,algo,ms,iterations,colors")
+for name in SUITE_SPECS:
+    g = get_dataset(name, scale=args.scale, layout=args.layout,
+                    reorder=args.reorder)
+    g_orig = (g if g.perm is None or g.perm.is_identity
+              else get_dataset(name, scale=args.scale, layout=args.layout))
     for algo in algos:
         alg = get_algorithm(algo)
         r = color(g, algo=alg, mode=args.mode, outline=args.outline)
         # fail loudly: a conflict or uncolored node raises, the script
-        # exits non-zero, and no misleading row is printed
-        verify_coloring(g, r.colors, context=f"{name}/{algo}")
+        # exits non-zero, and no misleading row is printed; reordered
+        # graphs verify on the ORIGINAL ids via the inverse permutation
+        colors = (r.colors if g.perm is None
+                  else g.perm.colors_to_original(r.colors))
+        verify_coloring(g_orig, colors, context=f"{name}/{algo}")
         alg.check_invariants(r, g)
-        print(f"{name},{algo},{r.total_seconds * 1e3:.2f},"
+        print(f"{name},{g.layout.kind},{algo},{r.total_seconds * 1e3:.2f},"
               f"{r.iterations},{r.n_colors}")
 
 if args.tables:

@@ -1,12 +1,18 @@
 """Quickstart: color a graph with the paper's hybrid engine.
 
+The graph comes from the dataset registry (DESIGN.md §8): the pipeline
+ingests the edge list, plans a layout from its degree histogram and
+assembles the arrays — coloring results are identical under every
+layout, only the execution strategy changes.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import color
-from repro.graphs import make_graph, validate_coloring
+from repro.graphs import get_dataset, validate_coloring
 
-g = make_graph("kron_g500-logn21_s", scale=0.05)
-print(f"graph: {g.name}  nodes={g.n_nodes:,}  edges={g.n_edges:,}")
+g = get_dataset("kron_g500-logn21_s", scale=0.05, layout="auto")
+print(f"graph: {g.name}  nodes={g.n_nodes:,}  edges={g.n_edges:,}  "
+      f"layout={g.layout.kind} (K={g.ell_width})")
 
 result = color(g, mode="hybrid", h=0.6)
 check = validate_coloring(g, result.colors)

@@ -70,9 +70,17 @@ class Algorithm:
     uses_window: bool = True
 
     # --- graph preparation / state -----------------------------------------
-    def prepare(self, g: Graph, *, priority: str | None = None
+    def prepare(self, g: Graph, *, priority: str | None = None, plan=None
                 ) -> ipgc.IPGCGraph:
-        return ipgc.prepare(g, priority=priority or self.default_priority)
+        """``plan`` is the static ``LayoutPlan`` to execute under
+        (DESIGN.md §8); ``None`` uses the plan the graph was assembled
+        with. The IPGC-family steps dispatch on ``plan.kind`` (the
+        csr-segment edge-wise variants vs the ELL tile path); algorithms
+        whose steps read the ELL arrays directly (JPL) run the ELL path
+        under any plan — the assembly contract keeps ELL+tail complete
+        for every kind, so that is always correct."""
+        return ipgc.prepare(g, priority=priority or self.default_priority,
+                            plan=plan)
 
     def init_state(self, ig: ipgc.IPGCGraph):
         """(colors, aux, wl) initial engine state."""

@@ -369,6 +369,7 @@ def color_distributed(
     fused: bool | None = True,    # fused = ONE color exchange per iteration
     balance: bool = True,
     steps_cache: dict | None = None,
+    layout: "str | object | None" = None,
 ) -> ColoringResult:
     """Sharded hybrid Pipe: the host-loop driver over the shard_map steps.
 
@@ -391,14 +392,25 @@ def color_distributed(
     partitioned graph and the jitted shard_map steps (each call otherwise
     builds fresh jit closures, so repeat colorings of the same graph —
     and warm benchmark timings — would re-trace from scratch).
+    ``layout``: engine-level plan override (``engine.resolve_plan``);
+    the sharded steps are the ELL-family tile steps, so ``csr-segment``
+    execution is rejected — pass ``layout="ell-tail"`` to run a
+    csr-segment-planned graph here (its ELL+tail arrays are complete).
     """
     from repro.algos import get_algorithm
+    from repro.core.engine import resolve_plan
     alg = get_algorithm(algo)
     if not alg.shard_safe:
         raise ValueError(
             f"algorithm {alg.name!r} is not shard-safe: "
             f"{alg.shard_unsafe_reason or 'no distributed steps'}")
     assert isinstance(g, Graph), "color_distributed needs a host Graph"
+    plan = resolve_plan(g, layout)
+    if plan is not None and plan.kind == "csr-segment":
+        raise NotImplementedError(
+            "csr-segment execution has no shard_map steps (the edge-wise "
+            "segment scatter is not owner-local); pass layout='ell-tail' "
+            "to run this graph's ELL+tail arrays under the sharded Pipe")
     fused = alg.resolve_fused(fused, default=True)
     custom_mesh = mesh is not None
     if mesh is None:
@@ -411,8 +423,10 @@ def color_distributed(
     # caller-provided mesh is cached by identity (steps close over it).
     # The algorithm is keyed by the (frozen, hashable) instance, not its
     # name: two tuned variants sharing a name must not share cached steps.
+    # the plan joins the cache key exactly like the algorithm instance: a
+    # frozen dataclass, so two layout variants never share cached steps
     key = (g.name, g.n_nodes, g.n_edges, n_shards, node_axes, window,
-           priority, fused, balance, alg,
+           priority, fused, balance, alg, plan,
            id(mesh) if custom_mesh else None)
     if steps_cache is not None and key in steps_cache:
         (g2, new_of_old, ig, window, dense_fn, sparse_fn,
@@ -421,7 +435,7 @@ def color_distributed(
         g2, new_of_old = prepare_partition(g, n_shards, balance=balance)
         if window == "auto":
             window = adaptive_window(g2) if alg.uses_window else 128
-        ig = alg.prepare(g2, priority=priority)
+        ig = alg.prepare(g2, priority=priority, plan=plan)
         dense_fn, sparse_fn = alg.make_dist_steps(
             ig, mesh, node_axes, window=window, fused=fused)
         resize_fn = make_dist_resize(mesh, node_axes, ig.n_nodes)

@@ -74,6 +74,30 @@ class ColoringResult:
     host_dispatches: int = 0    # device-program launches the host issued
 
 
+def resolve_plan(g, layout):
+    """Resolve an engine-level ``layout=`` argument to a static
+    ``LayoutPlan`` (DESIGN.md §8).
+
+    ``None`` -> the plan the graph was assembled under. A kind string
+    re-dispatches *execution* on the same arrays (every assembly keeps
+    CSR complete and ELL+tail complete, so flipping e.g. an ell-tail
+    graph to ``"csr-segment"`` execution — or back — is always sound);
+    an explicit ``LayoutPlan`` is passed through. This is the layout
+    analogue of ``algo=``: the resolved plan rides the prepared graph's
+    static fields, so every step cache keys on it for free.
+    """
+    from repro.graphs.layout import LAYOUT_KINDS, LayoutPlan
+    plan = getattr(g, "layout", None)
+    if layout is None:
+        return plan
+    if isinstance(layout, LayoutPlan):
+        return layout
+    if layout not in LAYOUT_KINDS:
+        raise ValueError(f"unknown layout {layout!r}; valid: "
+                         f"{LAYOUT_KINDS} (or a LayoutPlan)")
+    return dataclasses.replace(plan or LayoutPlan(), kind=layout)
+
+
 def adaptive_window(g: Graph, *, lo: int = 32, hi: int = 128) -> int:
     """Color-window heuristic (beyond-paper optimisation, EXPERIMENTS.md
     §Perf): mex(v) <= deg(v), and IPGC's chromatic number tracks the
@@ -103,6 +127,7 @@ def color(
     #                               False, outlined per backend, dist True)
     outline: bool | None = None,  # None -> set_outline_default()/env default
     n_shards: int | None = None,  # dist-* modes: shard count (None = all)
+    layout: "str | object | None" = None,  # LayoutPlan / kind; None = g's plan
 ) -> ColoringResult:
     # lazy: repro.algos imports this package's submodules at import time
     from repro.algos import get_algorithm
@@ -115,14 +140,16 @@ def color(
         return color_distributed(
             g, n_shards=n_shards, mode=mode, algo=alg, h=h, window=window,
             bucket_ratio=bucket_ratio, max_iter=max_iter, priority=priority,
-            policy=policy, collect_tti=collect_tti, fused=fused)
+            policy=policy, collect_tti=collect_tti, fused=fused,
+            layout=layout)
     if outline is None:
         outline = outline_default()
     if outline:
         return color_outlined_hybrid(
             g, mode=mode, algo=alg, h=h, window=window, impl=impl,
             bucket_ratio=bucket_ratio, max_iter=max_iter, priority=priority,
-            policy=policy, collect_tti=collect_tti, fused=fused)
+            policy=policy, collect_tti=collect_tti, fused=fused,
+            layout=layout)
     # host-loop default: two-phase steps (the algorithm may pin a family)
     fused = alg.resolve_fused(fused, default=False)
     if window == "auto":
@@ -131,7 +158,8 @@ def color(
             window = adaptive_window(g)
         else:
             window = 128               # inert static arg (e.g. JPL)
-    ig = alg.prepare(g, priority=priority) if isinstance(g, Graph) else g
+    ig = (alg.prepare(g, priority=priority, plan=resolve_plan(g, layout))
+          if isinstance(g, Graph) else g)
     n = ig.n_nodes
     pol = policy or make_policy(mode, h)
     caps = bucket_capacities(n, ratio=bucket_ratio)
@@ -252,6 +280,7 @@ def color_outlined_hybrid(
     policy: Policy | None = None,
     collect_tti: bool = False,
     fused: bool | None = None,
+    layout: "str | object | None" = None,
 ) -> ColoringResult:
     """Device-resident hybrid Pipe: ~O(#buckets) host dispatches total.
 
@@ -283,7 +312,8 @@ def color_outlined_hybrid(
             window = adaptive_window(g)
         else:
             window = 128               # inert static arg (e.g. JPL)
-    ig = alg.prepare(g, priority=priority) if isinstance(g, Graph) else g
+    ig = (alg.prepare(g, priority=priority, plan=resolve_plan(g, layout))
+          if isinstance(g, Graph) else g)
     n = ig.n_nodes
     pol = policy or make_policy(mode, h)
     caps = bucket_capacities(n, ratio=bucket_ratio)

@@ -42,7 +42,15 @@ from repro.core.worklist import Worklist, compact_items, compact_mask
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class IPGCGraph:
-    """Device-side graph prepared for the coloring engine."""
+    """Device-side graph prepared for the coloring engine.
+
+    ``layout_kind`` is the static execution-layout dispatch axis (the
+    ``LayoutPlan.kind`` the graph was prepared under, DESIGN.md §8): the
+    ELL-family kinds (pure-ell / ell-tail / hub-split) run the ELL tile
+    steps below, ``csr-segment`` runs the edge-wise segment variants
+    (``edge_src``/``edge_dst`` populated, CSR expanded at prepare time).
+    Being static, it keys every jit/step cache exactly like ``algo=``.
+    """
 
     # static metadata
     n_nodes: int = dataclasses.field(metadata=dict(static=True))
@@ -58,13 +66,29 @@ class IPGCGraph:
     tail_slot: jax.Array      # i32[T] hub slot of tail_src
     hub_slot: jax.Array       # i32[N], n_hub for non-hub nodes
     hub_ids: jax.Array        # i32[max(n_hub,1)]
+    # layout dispatch (static) + csr-segment edge arrays (None elsewhere)
+    layout_kind: str = dataclasses.field(default="ell-tail",
+                                         metadata=dict(static=True))
+    edge_src: jax.Array | None = None   # i32[Ep] clipped, pad lanes -> 0
+    edge_dst: jax.Array | None = None   # i32[Ep], pad = N (sentinel slot)
 
 
-def prepare(g: Graph, *, priority: str = "hash") -> IPGCGraph:
-    """priority="hash" (paper engine) or "id" (Kokkos-VB-style tie-break)."""
+def prepare(g: Graph, *, priority: str = "hash", plan=None) -> IPGCGraph:
+    """priority="hash" (paper engine) or "id" (Kokkos-VB-style tie-break).
+
+    ``plan`` is the ``LayoutPlan`` to execute under (None reads the plan
+    the graph was assembled with; graphs from the legacy builder default
+    to ell-tail). Only ``plan.kind`` matters here — the arrays were laid
+    out at assembly; prepare picks the execution variant.
+    """
     a = g.arrays
     n = g.n_nodes
+    if plan is None:
+        plan = getattr(g, "layout", None)
+    kind = getattr(plan, "kind", None) or "ell-tail"
     deg = np.asarray(a.degrees)
+    # hub rows == rows with tail entries: degree above the plan's spill
+    # threshold (== ell_width for every kind; hub-split rows spill whole)
     hub_ids = np.nonzero(deg > a.ell_width)[0].astype(np.int32)
     n_hub = len(hub_ids)
     hub_slot = np.full(n, n_hub, dtype=np.int32)
@@ -74,6 +98,15 @@ def prepare(g: Graph, *, priority: str = "hash") -> IPGCGraph:
     tail_src_safe = np.minimum(tail_src, n - 1)
     pr = np.asarray(a.priority) if priority == "hash" else np.arange(n, dtype=np.int32)
     prio = np.concatenate([pr, np.full(1, -1, np.int32)])
+    edge_src = edge_dst = None
+    if kind == "csr-segment":
+        e = int(np.asarray(a.row_ptr)[-1])
+        ep = max(-(-max(e, 1) // 8) * 8, 8)
+        es = np.zeros(ep, dtype=np.int32)           # pad lanes inert (ec<0)
+        ed = np.full(ep, n, dtype=np.int32)
+        es[:e] = np.repeat(np.arange(n, dtype=np.int32), deg)
+        ed[:e] = np.asarray(a.col_idx)
+        edge_src, edge_dst = jnp.asarray(es), jnp.asarray(ed)
     return IPGCGraph(
         n_nodes=n,
         ell_width=a.ell_width,
@@ -87,6 +120,9 @@ def prepare(g: Graph, *, priority: str = "hash") -> IPGCGraph:
         tail_slot=jnp.asarray(hub_slot[tail_src_safe]),
         hub_slot=jnp.asarray(hub_slot),
         hub_ids=jnp.asarray(hub_ids if n_hub else np.zeros(1, np.int32)),
+        layout_kind=kind,
+        edge_src=edge_src,
+        edge_dst=edge_dst,
     )
 
 
@@ -260,6 +296,90 @@ def _hub_lose(ig: IPGCGraph, colors: jax.Array, newly_full: jax.Array) -> jax.Ar
 
 
 # ---------------------------------------------------------------------------
+# csr-segment step variants — edge-wise segment ops over the full edge set
+# ---------------------------------------------------------------------------
+# Active when the graph was prepared under a ``csr-segment`` LayoutPlan
+# (DESIGN.md §8): no ELL tiles are gathered; both phases run one
+# O(E)-scatter / segment-reduce pass over (edge_src, edge_dst) via
+# ``kernels/csr_segment.py``. The hub side-channel is unnecessary — the
+# edge set already covers every entry. The mex/conflict semantics are the
+# exact predicates of the ELL path evaluated over the same neighbour
+# sets, so csr-segment colorings are bit-identical to ell-tail ones.
+#
+# Phase split: compute is row-complete (the forbidden bitmap and conflict
+# flags cover all N rows — segment ops have no worklist-shaped form), so
+# dense and sparse variants share the core and differ only in how the
+# worklist is re-emitted: the dense form re-compacts from the mask, the
+# data-driven form filters its items block in O(C).
+
+def _csr_two_phase_core(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+                        active: jax.Array, *, window: int):
+    from repro.kernels import csr_segment as kcsr
+    n = ig.n_nodes
+    es, ed = ig.edge_src, ig.edge_dst
+    # --- assign (speculative windowed mex over the edge scatter) ---
+    ec = _gather_neighbor_colors(colors, ed)             # E-shaped gather 1
+    forb = kcsr.edge_forbidden(es, ec, base[es], n, window)
+    new_c, new_base, newly = _mex_from_forbidden(
+        forb, active, base, colors[:n], window)
+    colors2 = colors.at[:n].set(new_c)
+    # --- resolve (segment-any of the losing-edge predicate) ---
+    cv = _gather_neighbor_colors(colors2, ed)            # E-shaped gather 2
+    lose = kcsr.edge_conflict(es, ed, colors2[es], cv, ig.priority[es],
+                              ig.priority[ed], n) & newly
+    colors3 = colors2.at[:n].set(jnp.where(lose, NO_COLOR, colors2[:n]))
+    still = lose | (active & ~newly)
+    return colors3, new_base, still
+
+
+def _csr_fused_core(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+                    active: jax.Array, *, window: int):
+    from repro.kernels import csr_segment as kcsr
+    n = ig.n_nodes
+    es, ed = ig.edge_src, ig.edge_dst
+    cu = colors[:n]
+    pending = active & (cu >= 0)
+    ec = _gather_neighbor_colors(colors, ed)             # the ONE gather
+    lose = kcsr.edge_conflict(es, ed, cu[es], ec, ig.priority[es],
+                              ig.priority[ed], n) & pending
+    forb = kcsr.edge_forbidden(es, ec, base[es], n, window)
+    free = ~forb
+    has = free.any(axis=1)
+    first = jnp.argmax(free, axis=1).astype(jnp.int32)
+    need = lose | (active & (cu < 0))
+    new_c = jnp.where(need & has, base + first,
+                      jnp.where(lose, NO_COLOR, cu))
+    new_base = jnp.where(need & ~has, base + window, base)
+    colors2 = colors.at[:n].set(new_c)
+    return colors2, new_base, need
+
+
+def _csr_emit_dense(wl: Worklist, still: jax.Array, n: int) -> Worklist:
+    items, count = compact_mask(still, wl.items.shape[0], n)
+    return Worklist(mask=still, items=items, count=count)
+
+
+def _csr_emit_sparse(wl: Worklist, still: jax.Array, n: int) -> Worklist:
+    """O(C) data-driven worklist maintenance: filter the items block
+    against the row-complete ``still`` flags (mask and items describe the
+    same set — the §2 dual-representation invariant)."""
+    items = wl.items
+    valid = items < n
+    keep = jnp.where(valid, still[jnp.minimum(items, n - 1)], False)
+    new_items, count = compact_items(items, keep, n)
+    return Worklist(mask=still, items=new_items, count=count)
+
+
+def _csr_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
+              wl: Worklist, *, window: int, fused: bool, sparse: bool
+              ) -> tuple[jax.Array, jax.Array, Worklist]:
+    core = _csr_fused_core if fused else _csr_two_phase_core
+    colors2, base2, still = core(ig, colors, base, wl.mask, window=window)
+    emit = _csr_emit_sparse if sparse else _csr_emit_dense
+    return colors2, base2, emit(wl, still, ig.n_nodes)
+
+
+# ---------------------------------------------------------------------------
 # dense (topology-driven) step — sweeps all N rows, maintains the worklist
 # ---------------------------------------------------------------------------
 
@@ -267,6 +387,9 @@ def dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
                     wl: Worklist, *, window: int = 128, impl: str = "jnp",
                     force_hub: bool | None = None
                     ) -> tuple[jax.Array, jax.Array, Worklist]:
+    if ig.layout_kind == "csr-segment":
+        return _csr_step(ig, colors, base, wl, window=window,
+                         fused=False, sparse=False)
     n = ig.n_nodes
     active = wl.mask
     row_ids = jnp.arange(n, dtype=jnp.int32)
@@ -307,6 +430,9 @@ def sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
                      wl: Worklist, *, window: int = 128, impl: str = "jnp",
                      force_hub: bool | None = None
                      ) -> tuple[jax.Array, jax.Array, Worklist]:
+    if ig.layout_kind == "csr-segment":
+        return _csr_step(ig, colors, base, wl, window=window,
+                         fused=False, sparse=True)
     n = ig.n_nodes
     items = wl.items
     valid = items < n
@@ -403,6 +529,9 @@ def fused_dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
                           wl: Worklist, *, window: int = 128,
                           impl: str = "jnp", force_hub: bool | None = None
                           ) -> tuple[jax.Array, jax.Array, Worklist]:
+    if ig.layout_kind == "csr-segment":
+        return _csr_step(ig, colors, base, wl, window=window,
+                         fused=True, sparse=False)
     n = ig.n_nodes
     active = wl.mask
     row_ids = jnp.arange(n, dtype=jnp.int32)
@@ -442,6 +571,9 @@ def fused_sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
                            wl: Worklist, *, window: int = 128,
                            impl: str = "jnp", force_hub: bool | None = None
                            ) -> tuple[jax.Array, jax.Array, Worklist]:
+    if ig.layout_kind == "csr-segment":
+        return _csr_step(ig, colors, base, wl, window=window,
+                         fused=True, sparse=True)
     n = ig.n_nodes
     items = wl.items
     valid = items < n

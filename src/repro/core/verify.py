@@ -1,10 +1,12 @@
 """Shared coloring verification — the single checker benchmarks, tests and
 examples call instead of hand-rolling ``validate_coloring`` assertions.
 
-``validate_coloring`` (graphs/csr.py) *reports*; ``verify_coloring``
-*enforces*: it raises ``InvalidColoringError`` on any conflict edge or (by
-default) any uncolored node, with a message that names the offender, and
-returns the stats dict on success so call sites can keep using the counts.
+``coloring_stats`` is the one place the conflict/uncolored/color counts
+are computed; ``graphs/csr.validate_coloring`` (the historical reporting
+helper) is a thin wrapper over it. ``verify_coloring`` *enforces*: it
+raises ``InvalidColoringError`` on any conflict edge or (by default) any
+uncolored node, with a message that names the offender, and returns the
+stats dict on success so call sites can keep using the counts.
 
 The error subclasses AssertionError so pytest reports it natively and
 pre-existing ``assert v["conflicts"] == 0`` call sites migrate without
@@ -14,11 +16,24 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.graphs.csr import Graph, validate_coloring
+from repro.graphs.csr import Graph
 
 
 class InvalidColoringError(AssertionError):
     """A coloring violated validity (conflict edge / uncolored node)."""
+
+
+def coloring_stats(g: Graph, colors: np.ndarray) -> dict:
+    """Conflict/uncolored/chromatic counts over the CSR edge set — the
+    canonical computation both ``verify_coloring`` and the graphs-layer
+    ``validate_coloring`` report from."""
+    colors = np.asarray(colors)[: g.n_nodes]
+    s = np.repeat(np.arange(g.n_nodes), np.asarray(g.arrays.degrees))
+    d = np.asarray(g.arrays.col_idx)
+    conflicts = int(np.sum((colors[s] == colors[d]) & (colors[s] >= 0)))
+    uncolored = int(np.sum(colors < 0))
+    n_colors = int(colors.max()) + 1 if colors.size and colors.max() >= 0 else 0
+    return {"conflicts": conflicts // 2, "uncolored": uncolored, "n_colors": n_colors}
 
 
 def verify_coloring(g: Graph, colors: np.ndarray, *,
@@ -27,12 +42,12 @@ def verify_coloring(g: Graph, colors: np.ndarray, *,
     """Verify ``colors`` is a proper (and, by default, complete) coloring
     of ``g``; raise ``InvalidColoringError`` otherwise.
 
-    Returns ``validate_coloring``'s stats dict
+    Returns ``coloring_stats``'s dict
     (``{"conflicts", "uncolored", "n_colors"}``) on success.
     ``context`` is prepended to the failure message (graph name, engine
     mode, shard count — whatever the call site knows).
     """
-    stats = validate_coloring(g, colors)
+    stats = coloring_stats(g, colors)
     where = f"{context}: " if context else ""
     if stats["conflicts"]:
         raise InvalidColoringError(

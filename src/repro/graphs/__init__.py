@@ -1,4 +1,6 @@
-"""Graph substrate: CSR/ELL/COO structures, synthetic suite, partitioning, sampling."""
+"""Graph substrate: the staged construction pipeline (ingest -> reorder ->
+layout plan -> assembly, DESIGN.md §8), CSR/ELL/COO structures, the
+dataset registry, synthetic suite, partitioning, sampling."""
 from repro.graphs.csr import (  # noqa: F401
     Graph,
     GraphArrays,
@@ -8,4 +10,12 @@ from repro.graphs.csr import (  # noqa: F401
     PAD_COLOR,
     validate_coloring,
 )
+from repro.graphs.ingest import EdgeList  # noqa: F401
+from repro.graphs.layout import LAYOUT_KINDS, LayoutPlan, plan_layout  # noqa: F401
+from repro.graphs.transform import REORDERINGS, Permutation  # noqa: F401
 from repro.graphs.generators import SUITE_SPECS, make_suite, make_graph  # noqa: F401
+from repro.graphs.registry import (  # noqa: F401
+    dataset_names,
+    get_dataset,
+    register_dataset,
+)

@@ -1,15 +1,26 @@
-"""Graph data structures.
+"""Graph data structures + the pipeline facade.
 
 Host-side construction is numpy; device code consumes a ``GraphArrays``
-pytree of jnp arrays.
+pytree of jnp arrays. Construction itself is a staged pipeline
+(DESIGN.md §8):
 
-Layouts
+    ingest.py     edge-list sources (generators, .mtx, SNAP) + normalize
+    transform.py  pluggable node reorderings (permutation + inverse map)
+    layout.py     LayoutPlan selection (degree histogram) + assembly
+    registry.py   ``get_dataset`` — one cached entry point over all of it
+
+``build_graph`` below is the facade over those stages; existing callers
+keep their exact signature and (for the default ``layout="ell-tail"``,
+``reorder="identity"``) their exact arrays.
+
+Layouts (see layout.LayoutPlan for the per-kind kernel contract)
 -------
-CSR      row_ptr[N+1], col_idx[E]     — segment-op paths, sampling.
+CSR      row_ptr[N+1], col_idx[E]     — segment-op paths, sampling, and
+                                         the csr-segment execution layout.
 ELL      ell_idx[N, K] (pad = N)      — Pallas tile paths. K is the ELL
-                                         width (degree cap, multiple of 8).
-COO tail tail_src[T], tail_dst[T]     — entries of nodes whose degree
-                                         exceeds K (hub overflow). Padded
+                                         width (plan.ell_width, mult of 8).
+COO tail tail_src[T], tail_dst[T]     — hub overflow (ell-tail) or whole
+                                         hub rows (hub-split). Padded
                                          with (N, N).
 
 Color conventions
@@ -47,12 +58,21 @@ class GraphArrays(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Graph:
-    """Host-side graph with metadata."""
+    """Host-side graph with metadata.
+
+    ``layout`` is the static LayoutPlan the arrays were assembled under
+    (engines dispatch their step variants on it); ``perm`` is the
+    reordering that produced this labeling (None or identity for
+    unreordered graphs) — map per-node results back to original ids via
+    ``perm.colors_to_original``.
+    """
 
     name: str
     n_nodes: int
     n_edges: int          # undirected edge count
     arrays: GraphArrays
+    layout: "object" = None   # layout.LayoutPlan (lazy-typed: no cycle)
+    perm: "object" = None     # transform.Permutation | None
 
     @property
     def ell_width(self) -> int:
@@ -82,67 +102,27 @@ def build_graph(
     n_nodes: int,
     *,
     name: str = "graph",
-    ell_cap: int = 128,
+    ell_cap: int | None = 128,
     symmetrize: bool = True,
+    layout: "str | object" = "ell-tail",   # kind, "auto", or a LayoutPlan
+    reorder: str = "identity",
+    seed: int = 0,
 ) -> Graph:
-    """Build CSR + ELL + COO-tail from an edge list.
+    """Build a Graph from an edge list via the staged pipeline.
 
-    Pre-processing per the paper: self loops and duplicate edges removed.
-    ``ell_cap`` bounds the ELL width; rows with degree > width spill the
-    excess into the COO tail.
+    Pre-processing per the paper: self loops and duplicate edges removed
+    (``ingest.normalize`` — lexsort dedup, no overflow-prone flat key).
+    The defaults (``layout="ell-tail"``, ``ell_cap=128``,
+    ``reorder="identity"``) reproduce the historical single-layout
+    builder bit-identically; other layouts/reorders run the full
+    pipeline (DESIGN.md §8).
     """
-    src = np.asarray(src, dtype=np.int64)
-    dst = np.asarray(dst, dtype=np.int64)
-    if symmetrize:
-        s = np.concatenate([src, dst])
-        d = np.concatenate([dst, src])
-    else:
-        s, d = src, dst
-    keep = s != d  # drop self loops
-    s, d = s[keep], d[keep]
-    # dedup
-    key = s * n_nodes + d
-    _, uniq = np.unique(key, return_index=True)
-    s, d = s[uniq], d[uniq]
-    order = np.lexsort((d, s))
-    s, d = s[order], d[order]
+    from repro.graphs import ingest, layout as layout_mod
 
-    e = len(s)
-    degrees = np.bincount(s, minlength=n_nodes).astype(np.int32)
-    row_ptr = np.zeros(n_nodes + 1, dtype=np.int32)
-    np.cumsum(degrees, out=row_ptr[1:])
-    col_idx = d.astype(np.int32)
-
-    max_deg = int(degrees.max()) if e else 0
-    width = min(max(_round_up(max(max_deg, 1), 8), 8), ell_cap)
-
-    # ELL fill: first `width` neighbours of each row; remainder -> tail.
-    ell_idx = np.full((n_nodes, width), n_nodes, dtype=np.int32)
-    within = np.arange(e, dtype=np.int64) - row_ptr[s].astype(np.int64)
-    in_ell = within < width
-    ell_idx[s[in_ell], within[in_ell]] = d[in_ell]
-    t_src = s[~in_ell].astype(np.int32)
-    t_dst = d[~in_ell].astype(np.int32)
-    t = len(t_src)
-    t_pad = max(_round_up(max(t, 1), 8), 8)
-    tail_src = np.full(t_pad, n_nodes, dtype=np.int32)
-    tail_dst = np.full(t_pad, n_nodes, dtype=np.int32)
-    tail_src[:t] = t_src
-    tail_dst[:t] = t_dst
-
-    arrays = GraphArrays(
-        n_nodes=n_nodes,
-        n_edges=e,
-        ell_width=width,
-        row_ptr=row_ptr,
-        col_idx=col_idx,
-        degrees=degrees,
-        ell_idx=ell_idx,
-        tail_src=tail_src,
-        tail_dst=tail_dst,
-        priority=_splitmix32(np.arange(n_nodes, dtype=np.int64)),
-    )
-    return Graph(name=name, n_nodes=n_nodes, n_edges=e // 2, arrays=arrays)
+    return layout_mod.run_pipeline(
+        ingest.from_arrays(src, dst, n_nodes, name=name),
+        symmetrize=symmetrize, reorder=reorder, seed=seed, layout=layout,
+        ell_cap=ell_cap)
 
 
 def degree_stats(g: Graph) -> dict:
@@ -157,15 +137,17 @@ def degree_stats(g: Graph) -> dict:
         "d_mean": float(deg.mean()),
         "ell_width": g.ell_width,
         "tail_entries": int((np.asarray(g.arrays.tail_src) != g.n_nodes).sum()),
+        "layout": g.layout.kind if g.layout is not None else "ell-tail",
     }
 
 
 def validate_coloring(g: Graph, colors: np.ndarray) -> dict:
-    """Check the "no conflicts" property + report chromatic number."""
-    colors = np.asarray(colors)[: g.n_nodes]
-    s = np.repeat(np.arange(g.n_nodes), np.asarray(g.arrays.degrees))
-    d = np.asarray(g.arrays.col_idx)
-    conflicts = int(np.sum((colors[s] == colors[d]) & (colors[s] >= 0)))
-    uncolored = int(np.sum(colors < 0))
-    n_colors = int(colors.max()) + 1 if colors.size and colors.max() >= 0 else 0
-    return {"conflicts": conflicts // 2, "uncolored": uncolored, "n_colors": n_colors}
+    """Check the "no conflicts" property + report chromatic number.
+
+    Thin reporting wrapper over the canonical checker
+    (``core.verify.coloring_stats``) — kept for the historical call
+    sites; new code should use ``core.verify.verify_coloring``, which
+    raises with a named offender instead of returning counts.
+    """
+    from repro.core.verify import coloring_stats   # lazy: no import cycle
+    return coloring_stats(g, colors)

@@ -211,31 +211,30 @@ def _scaled(kwargs: dict, scale: float) -> dict:
 
 
 def make_graph(name: str, *, scale: float = 1.0, seed: int = 0,
-               ell_cap: int = 128) -> Graph:
+               ell_cap: int = 128, layout="ell-tail",
+               reorder: str = "identity") -> Graph:
     family, kwargs = SUITE_SPECS[name]
     src, dst, n = _FAMILY[family](seed, **_scaled(kwargs, scale))
-    return build_graph(src, dst, n, name=name, ell_cap=ell_cap)
+    return build_graph(src, dst, n, name=name, ell_cap=ell_cap,
+                       layout=layout, reorder=reorder, seed=seed)
 
 
 def make_suite(*, scale: float = 1.0, seed: int = 0, ell_cap: int = 128,
-               names: list[str] | None = None) -> dict[str, Graph]:
+               names: list[str] | None = None, layout="ell-tail",
+               reorder: str = "identity") -> dict[str, Graph]:
     names = names or list(SUITE_SPECS)
-    return {n: make_graph(n, scale=scale, seed=seed, ell_cap=ell_cap) for n in names}
+    return {n: make_graph(n, scale=scale, seed=seed, ell_cap=ell_cap,
+                          layout=layout, reorder=reorder) for n in names}
 
 
-def load_mtx(path: str, *, name: str | None = None, ell_cap: int = 128) -> Graph:
-    """Loader for real UFL .mtx graphs when available on a deployment."""
-    with open(path) as f:
-        header = f.readline()
-        while True:
-            pos = f.tell()
-            line = f.readline()
-            if not line.startswith("%"):
-                f.seek(pos)
-                break
-        rows, cols, _ = (int(x) for x in f.readline().split()[:3])
-        data = np.loadtxt(f, usecols=(0, 1), dtype=np.int64, ndmin=2)
-    del header
-    n = max(rows, cols)
-    return build_graph(data[:, 0] - 1, data[:, 1] - 1, n,
-                       name=name or path, ell_cap=ell_cap)
+def load_mtx(path: str, *, name: str | None = None, ell_cap: int = 128,
+             layout="ell-tail", reorder: str = "identity") -> Graph:
+    """Loader for real UFL .mtx graphs when available on a deployment.
+
+    Parsing lives in ``ingest.from_mtx`` (which validates the
+    MatrixMarket header); this wrapper runs the rest of the pipeline.
+    """
+    from repro.graphs.ingest import from_mtx
+    e = from_mtx(path, name=name)
+    return build_graph(e.src, e.dst, e.n_nodes, name=e.name,
+                       ell_cap=ell_cap, layout=layout, reorder=reorder)

@@ -62,8 +62,16 @@ def repartition(g: Graph, n_shards: int, *, balance: bool = True,
     dst = np.asarray(g.arrays.col_idx)
     g2 = build_graph(new_of_old[src], new_of_old[dst], g.n_nodes,
                      name=g.name + f"@p{n_shards}",
-                     ell_cap=g.ell_width, symmetrize=False)
+                     ell_cap=g.ell_width, symmetrize=False,
+                     layout=_plan_of(g))
     return g2, new_of_old
+
+
+def _plan_of(g: Graph):
+    """The graph's LayoutPlan, for plan-preserving rebuilds (relabeling
+    keeps the degree multiset, so the original plan stays exact); legacy
+    plan-less graphs rebuild under the historical ell-tail rule."""
+    return g.layout if g.layout is not None else "ell-tail"
 
 
 def prepare_partition(g: Graph, n_shards: int, *, balance: bool = True,
@@ -92,7 +100,8 @@ def prepare_partition(g: Graph, n_shards: int, *, balance: bool = True,
         src = np.repeat(np.arange(g.n_nodes), deg)
         dst = np.asarray(g.arrays.col_idx)
         g = build_graph(src, dst, n_pad, name=g.name,
-                        ell_cap=g.ell_width, symmetrize=False)
+                        ell_cap=g.ell_width, symmetrize=False,
+                        layout=_plan_of(g))
     return repartition(g, n_shards, balance=balance, seed=seed)
 
 
