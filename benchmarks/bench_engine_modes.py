@@ -308,6 +308,90 @@ def bench_layouts(scale: float = 0.02, runs: int = 2, quiet: bool = False,
     return report
 
 
+def bench_serve(scale: float = 0.02, batch_sizes: tuple[int, ...] = (1, 8, 64),
+                quiet: bool = False,
+                out_path: str | None = "BENCH_serve.json") -> dict:
+    """Serving throughput: warm-session batched dispatch vs cold per-call.
+
+    Models the request-serving workload the unified session exists for
+    (DESIGN.md §9). Per shape class (a suite graph family at a fixed
+    scale) and per batch size B, a catalog of B *distinct* graphs (seed
+    variants) is colored three ways:
+
+      cold_per_call   a fresh ``Session``, one ``run`` per graph — every
+                      request pays preparation and any compilation
+      warm_per_call   the same session, same stream again — per-call
+                      dispatch with a hot cache
+      warm_batch      ``run_batch`` on a session that has already served
+                      the stream once — ONE padded device dispatch
+
+    Records graphs/sec and the session cache hit-rate for each, plus the
+    acceptance ratio ``warm_batch / cold_per_call``. Every batch result
+    is verified against an individual run before timing is trusted.
+    """
+    import jax
+
+    from repro.core.policy import Timer
+    from repro.exec import ExecutionSpec, Session
+    from repro.graphs import get_dataset_batch
+
+    classes = ["europe_osm_s", "kron_g500-logn21_s"]
+    spec = ExecutionSpec(regime="host")
+    report: dict = {"scale": scale, "batch_sizes": list(batch_sizes),
+                    "backend": jax.default_backend(), "classes": {}}
+    best_b8 = 0.0
+    for name in classes:
+        row: dict[str, dict] = {}
+        for b in batch_sizes:
+            requests = get_dataset_batch(
+                [(name, {"seed": s}) for s in range(b)], scale=scale)
+
+            cold = Session()
+            with Timer() as t_cold:
+                cold_results = [cold.run(spec, g) for g in requests]
+            cold_stats = cold.stats.as_dict()
+            with Timer() as t_wcall:
+                [cold.run(spec, g) for g in requests]
+
+            warm = Session()
+            batch_results = warm.run_batch(spec, requests)   # compile pass
+            for g, rb, ri in zip(requests, batch_results, cold_results):
+                verify_coloring(g, rb.colors, context=f"{name}/b{b}")
+                np.testing.assert_array_equal(rb.colors, ri.colors)
+            with Timer() as t_batch:
+                warm.run_batch(spec, requests)
+            warm_stats = warm.stats.as_dict()
+
+            cell = {
+                "cold_per_call_gps": round(b / t_cold.seconds, 2),
+                "warm_per_call_gps": round(b / t_wcall.seconds, 2),
+                "warm_batch_gps": round(b / t_batch.seconds, 2),
+                "speedup_warm_batch_vs_cold": round(
+                    t_cold.seconds / t_batch.seconds, 2),
+                "cold_cache": cold_stats,
+                "warm_cache": warm_stats,
+            }
+            if b >= 8:
+                best_b8 = max(best_b8, cell["speedup_warm_batch_vs_cold"])
+            row[f"batch_{b}"] = cell
+            if not quiet:
+                print(csv_row(name, f"B={b}",
+                              f"cold {cell['cold_per_call_gps']}/s",
+                              f"warm-call {cell['warm_per_call_gps']}/s",
+                              f"warm-batch {cell['warm_batch_gps']}/s",
+                              f"{cell['speedup_warm_batch_vs_cold']}x"))
+        report["classes"][name] = row
+    report["best_speedup_batch_ge_8"] = best_b8
+    if not quiet:
+        print(csv_row("BEST warm-batch vs cold (B>=8)", f"{best_b8:.2f}x"))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        if not quiet:
+            print(f"# wrote {out_path}")
+    return report
+
+
 def _reexec_with_devices(argv: list[str], n_devices: int) -> int:
     """Re-exec this module with forced host-platform devices (XLA binds the
     device count at first import, so it cannot be changed in-process).
@@ -351,6 +435,10 @@ def main() -> None:
     ap.add_argument("--algos-shards", type=int, default=2,
                     help="shard count for the --algos dist-hybrid cells")
     ap.add_argument("--algos-out", default="BENCH_algos.json")
+    ap.add_argument("--serve", action="store_true",
+                    help="warm-session batched serving throughput "
+                         "-> BENCH_serve.json")
+    ap.add_argument("--serve-out", default="BENCH_serve.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI fast path: tiny scale, 1 run, no JSON for the "
                          "host bench, dist bench on 1,2,8 shards (or the "
@@ -358,6 +446,12 @@ def main() -> None:
     args = ap.parse_args()
     shards = tuple(int(s) for s in args.shards.split(","))
 
+    if args.serve:
+        s_scale = 0.005 if args.smoke else args.scale
+        print(csv_row("class", "B", "cold", "warm-call", "warm-batch",
+                      "speedup"))
+        bench_serve(scale=s_scale, out_path=args.serve_out)
+        return
     if args.layouts:
         l_scale, l_runs = (0.01, 1) if args.smoke else (args.scale,
                                                         args.runs)

@@ -37,15 +37,15 @@ def bench(scale: float = 0.15, runs: int = 3, quiet=False):
     plains: dict[str, float] = {}
     for name, g in suite.items():
         for label, kw, force in variants:
-            ipgc.set_force_hub(force)
-            results[label][name] = _time(g, runs=runs, mode="hybrid", **kw)
-            r = color(g, mode="hybrid", **kw)
-            verify_coloring(g, r.colors, context=f"{name}/{label}")
+            with ipgc.forced_hub(force):
+                results[label][name] = _time(g, runs=runs, mode="hybrid",
+                                             **kw)
+                r = color(g, mode="hybrid", **kw)
+                verify_coloring(g, r.colors, context=f"{name}/{label}")
         # the paper's Plain baseline under the SAME final optimisations
-        ipgc.set_force_hub(False)
-        plains[name] = _time(g, runs=runs, mode="data", window="auto",
-                             bucket_ratio=2)
-    ipgc.set_force_hub(None)
+        with ipgc.forced_hub(False):
+            plains[name] = _time(g, runs=runs, mode="data", window="auto",
+                                 bucket_ratio=2)
 
     if not quiet:
         print(csv_row("graph", *(v[0] for v in variants), "plain_opt",

@@ -64,6 +64,17 @@ class Algorithm:
     shard_safe: bool = False
     #: surfaced by the engine when a dist mode is requested anyway
     shard_unsafe_reason: str = ""
+    #: may this algorithm run under ``Session.run_batch``? ``True``
+    #: promises the step impls are batch-axis safe — shape-static jnp
+    #: ops only, no host-side data-dependent control flow — AND that the
+    #: dense-form step applied to an arbitrary active set reproduces the
+    #: sparse-form step's state exactly (the dual-worklist invariant),
+    #: so a vmapped dense-only lane is bit-identical to the host loop's
+    #: per-iteration mode choice (DESIGN.md §9). Declared False by
+    #: default with a reason, mirroring ``shard_safe``.
+    batch_safe: bool = False
+    #: surfaced by ``Session.run_batch`` when batching is requested anyway
+    batch_unsafe_reason: str = ""
     #: tie-break priority fed to ``prepare`` when the caller passes None
     default_priority: str = "hash"
     #: does the ``window``/``base`` mex machinery apply? (JPL: no)

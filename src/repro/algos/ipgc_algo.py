@@ -18,6 +18,9 @@ from repro.core import ipgc
 class IPGC(Algorithm):
     name: str = "ipgc"
     shard_safe: bool = True
+    #: the core/ipgc.py steps are the reference batch-axis-safe impls
+    #: (shape-static jnp ops; pad_prepared documents the inertness proof)
+    batch_safe: bool = True
     default_priority: str = "hash"
 
     def init_state(self, ig):

@@ -175,6 +175,11 @@ jpl_sparse_step = jax.jit(jpl_sparse_step_impl, static_argnames=_JPL_STATICS)
 @dataclasses.dataclass(frozen=True)
 class JPL(Algorithm):
     name: str = "jpl"
+    #: batch-axis safe: both rounds are shape-static jnp ops, a round's
+    #: priorities hash (node id, round) — invariant under padding — and
+    #: JPL is mode-invariant (no speculation), so dense-only lanes match
+    #: the host loop's per-iteration mode choice bit-exactly
+    batch_safe: bool = True
     shard_safe: bool = False
     shard_unsafe_reason: str = (
         "independent-set extraction needs neighbour *activity*, which only "

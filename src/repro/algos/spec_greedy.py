@@ -40,6 +40,8 @@ from repro.core import ipgc
 class SpecGreedy(Algorithm):
     name: str = "spec-greedy"
     shard_safe: bool = True
+    #: reuses the ipgc fused steps, so it inherits their batch contract
+    batch_safe: bool = True
     default_priority: str = "hash"
 
     def init_state(self, ig):

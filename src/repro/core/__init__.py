@@ -4,7 +4,7 @@ any colorer registered with the pluggable algorithm subsystem
 (``repro.algos``; pass ``algo=`` to the engine entry points)."""
 from repro.core.engine import (ColoringResult, color,  # noqa: F401
                                color_outlined, color_outlined_hybrid,
-                               set_outline_default)
+                               outlined, set_outline_default)
 from repro.core.distributed import color_distributed  # noqa: F401
 from repro.core.baselines import jpl_color, vb_color  # noqa: F401
 from repro.core.worklist import Worklist, full_worklist, bucket_capacities  # noqa: F401

@@ -32,23 +32,18 @@ DESIGN.md §6).
 """
 from __future__ import annotations
 
-import math
-import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import ipgc
-from repro.core.engine import ColoringResult, adaptive_window
-from repro.core.policy import AutoTuned, Policy, Timer, make_policy
-from repro.core.worklist import (Worklist, bucket_capacities, compact_items,
-                                 pick_bucket, resize_block)
-from repro.graphs.csr import Graph, NO_COLOR, PAD_COLOR
-from repro.graphs.partition import prepare_partition
+from repro.core.engine import ColoringResult
+from repro.core.policy import Policy
+from repro.core.worklist import Worklist, compact_items, resize_block
+from repro.graphs.csr import Graph, NO_COLOR
 
 # --- exchange instrumentation (trace-time) ---------------------------------
 # Every color-vector exchange goes through ``_exchange_colors`` so tests can
@@ -388,98 +383,25 @@ def color_distributed(
     ``algo`` must name a shard-safe algorithm (the declaration contract,
     DESIGN.md §7); its ``make_dist_steps`` supplies the shard_map'd step
     pair and its ``init_state``/``finalize`` bracket the run.
-    ``steps_cache``: pass the same dict across calls to reuse the
-    partitioned graph and the jitted shard_map steps (each call otherwise
-    builds fresh jit closures, so repeat colorings of the same graph —
-    and warm benchmark timings — would re-trace from scratch).
+    ``steps_cache``: legacy compile-cache argument, still accepted — the
+    dict becomes the backing store of the ``Session`` the call runs on,
+    so passing the same dict across calls reuses the partitioned graph
+    and the jitted shard_map steps exactly as before. ``None`` runs on
+    the process-default session (DESIGN.md §9), which amortizes the same
+    artifacts across ALL entry points instead of per caller-dict.
     ``layout``: engine-level plan override (``engine.resolve_plan``);
     the sharded steps are the ELL-family tile steps, so ``csr-segment``
     execution is rejected — pass ``layout="ell-tail"`` to run a
     csr-segment-planned graph here (its ELL+tail arrays are complete).
     """
-    from repro.algos import get_algorithm
-    from repro.core.engine import resolve_plan
-    alg = get_algorithm(algo)
-    if not alg.shard_safe:
-        raise ValueError(
-            f"algorithm {alg.name!r} is not shard-safe: "
-            f"{alg.shard_unsafe_reason or 'no distributed steps'}")
-    assert isinstance(g, Graph), "color_distributed needs a host Graph"
-    plan = resolve_plan(g, layout)
-    if plan is not None and plan.kind == "csr-segment":
-        raise NotImplementedError(
-            "csr-segment execution has no shard_map steps (the edge-wise "
-            "segment scatter is not owner-local); pass layout='ell-tail' "
-            "to run this graph's ELL+tail arrays under the sharded Pipe")
-    fused = alg.resolve_fused(fused, default=True)
-    custom_mesh = mesh is not None
-    if mesh is None:
-        if n_shards is None:
-            n_shards = jax.device_count()
-        mesh = jax.make_mesh((n_shards,), node_axes)
-    else:
-        n_shards = math.prod(mesh.shape[a] for a in node_axes)
-    # auto-built meshes over the same device set are interchangeable; a
-    # caller-provided mesh is cached by identity (steps close over it).
-    # The algorithm is keyed by the (frozen, hashable) instance, not its
-    # name: two tuned variants sharing a name must not share cached steps.
-    # the plan joins the cache key exactly like the algorithm instance: a
-    # frozen dataclass, so two layout variants never share cached steps
-    key = (g.name, g.n_nodes, g.n_edges, n_shards, node_axes, window,
-           priority, fused, balance, alg, plan,
-           id(mesh) if custom_mesh else None)
-    if steps_cache is not None and key in steps_cache:
-        (g2, new_of_old, ig, window, dense_fn, sparse_fn,
-         resize_fn) = steps_cache[key]
-    else:
-        g2, new_of_old = prepare_partition(g, n_shards, balance=balance)
-        if window == "auto":
-            window = adaptive_window(g2) if alg.uses_window else 128
-        ig = alg.prepare(g2, priority=priority, plan=plan)
-        dense_fn, sparse_fn = alg.make_dist_steps(
-            ig, mesh, node_axes, window=window, fused=fused)
-        resize_fn = make_dist_resize(mesh, node_axes, ig.n_nodes)
-        if steps_cache is not None:
-            steps_cache[key] = (g2, new_of_old, ig, window, dense_fn,
-                                sparse_fn, resize_fn)
-    n = ig.n_nodes
-    block = n // n_shards
-    pol = policy or make_policy(mode, h)
-    caps = bucket_capacities(block, ratio=bucket_ratio)  # per-shard ladder
-
-    colors, base, wl = alg.init_state(ig)
-    # per-shard blocks == arange slices of the full worklist
-    count = n
-
-    trace: list[str] = []
-    counts: list[int] = []
-    tti: list[float] = []
-    t_start = time.perf_counter()
-    it = 0
-    while count > 0 and it < max_iter:
-        use_dense = bool(pol(count, n))
-        counts.append(count)
-        with Timer() as t:
-            if use_dense:
-                colors, base, wl = dense_fn(colors, base, wl)
-            else:
-                # any shard's live count is <= min(global count, block)
-                cap = pick_bucket(caps, min(count, block))
-                if wl.items.shape[0] > n_shards * cap:
-                    wl = resize_fn(wl, cap)
-                colors, base, wl = sparse_fn(colors, base, wl)
-            count = int(wl.count)  # the Pipe's single scalar read-back
-        trace.append("D" if use_dense else "S")
-        if collect_tti:
-            tti.append(t.seconds)
-        if isinstance(pol, AutoTuned):
-            pol.observe(use_dense, counts[-1], n, t.seconds)
-        it += 1
-
-    total = time.perf_counter() - t_start
-    full = np.asarray(colors[:n])
-    final = full[new_of_old[:g.n_nodes]]   # back to original labels
-    final, n_colors = alg.finalize(final)
-    return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
-                          mode_trace="".join(trace), counts=counts, tti=tti,
-                          total_seconds=total, host_dispatches=it)
+    # thin dispatcher over the unified session (driver loop + cache live
+    # in repro.exec.session; lazy import — repro.exec imports this module)
+    from repro.exec import ExecutionSpec, Session, default_session
+    spec = ExecutionSpec(
+        regime="dist", mode=mode, algo=algo, layout=layout, h=h,
+        window=window, bucket_ratio=bucket_ratio, max_iter=max_iter,
+        priority=priority, fused=fused, n_shards=n_shards, balance=balance)
+    session = (default_session() if steps_cache is None
+               else Session(cache=steps_cache))
+    return session.run(spec, g, policy=policy, collect_tti=collect_tti,
+                       mesh=mesh, node_axes=node_axes)

@@ -22,9 +22,17 @@ Two dispatch regimes (DESIGN.md §4):
 The worklist state is maintained by *both* steps (the paper's
 contribution), so there is no rebuild cost at a switch: we only ever
 *slice* the already-compacted items array down to a smaller bucket.
+
+Since the unified-session refactor (DESIGN.md §9) both entry points —
+plus ``color_distributed`` — are thin dispatchers over
+``repro.exec.Session``: they translate their keyword surface into an
+``ExecutionSpec`` and run it on the process-default session, which owns
+the one keyed compile cache all three regimes share. Results are
+bit-identical to the pre-session drivers (tests/test_exec.py).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import time
@@ -34,11 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ipgc
-from repro.core.policy import (AutoTuned, Policy, Timer, device_threshold,
-                               make_policy)
-from repro.core.worklist import (Worklist, bucket_capacities,
-                                 chunk_lower_bounds, full_worklist,
-                                 pick_bucket, resize_items)
+from repro.core.policy import Policy
+from repro.core.worklist import full_worklist
 from repro.graphs.csr import Graph
 
 # Outlining as the default fast path is gated behind this env flag (read
@@ -58,6 +63,25 @@ def set_outline_default(value: bool | None) -> None:
 
 def outline_default() -> bool:
     return _OUTLINE_ENV if _outline_override is None else _outline_override
+
+
+@contextlib.contextmanager
+def outlined(value: bool | None):
+    """Scoped outline-by-default override — the context-manager form of
+    ``set_outline_default`` (restores the *previous* override on exit,
+    including the no-override ``None`` state), so callers never leak the
+    toggle across tests or benchmark cells::
+
+        with engine.outlined(True):
+            r = color(g)          # routes through the outlined Pipe
+    """
+    global _outline_override
+    prev = _outline_override
+    set_outline_default(value)
+    try:
+        yield
+    finally:
+        _outline_override = prev
 
 
 @dataclasses.dataclass
@@ -103,8 +127,16 @@ def adaptive_window(g: Graph, *, lo: int = 32, hi: int = 128) -> int:
     §Perf): mex(v) <= deg(v), and IPGC's chromatic number tracks the
     *typical* degree, so a window ~2x the median degree covers almost all
     assignments in one pass while hub nodes advance their base. Cuts the
-    O(C*W) per-iteration mex term up to 4x on low-degree graphs."""
-    med = int(np.median(np.asarray(g.arrays.degrees)))
+    O(C*W) per-iteration mex term up to 4x on low-degree graphs.
+
+    Degenerate histograms clamp cleanly (tests/test_policy.py): a graph
+    with no nodes has no median — return ``lo``; an all-hub graph's
+    median blows past the window budget — clamp to ``hi``.
+    """
+    deg = np.asarray(g.arrays.degrees)
+    if deg.size == 0:
+        return lo
+    med = int(np.median(deg))
     return int(min(max(-(-2 * (med + 1) // 32) * 32, lo), hi))
 
 
@@ -129,141 +161,22 @@ def color(
     n_shards: int | None = None,  # dist-* modes: shard count (None = all)
     layout: "str | object | None" = None,  # LayoutPlan / kind; None = g's plan
 ) -> ColoringResult:
-    # lazy: repro.algos imports this package's submodules at import time
-    from repro.algos import get_algorithm
-    alg = get_algorithm(algo)
-    if mode.startswith("dist-"):
-        # sharded Pipe (shard_map steps over owner blocks); lazy import —
-        # distributed.py itself imports this module for the result type
-        from repro.core.distributed import color_distributed
-        assert isinstance(g, Graph), "distributed modes need a host Graph"
-        return color_distributed(
-            g, n_shards=n_shards, mode=mode, algo=alg, h=h, window=window,
-            bucket_ratio=bucket_ratio, max_iter=max_iter, priority=priority,
-            policy=policy, collect_tti=collect_tti, fused=fused,
-            layout=layout)
-    if outline is None:
-        outline = outline_default()
-    if outline:
-        return color_outlined_hybrid(
-            g, mode=mode, algo=alg, h=h, window=window, impl=impl,
-            bucket_ratio=bucket_ratio, max_iter=max_iter, priority=priority,
-            policy=policy, collect_tti=collect_tti, fused=fused,
-            layout=layout)
-    # host-loop default: two-phase steps (the algorithm may pin a family)
-    fused = alg.resolve_fused(fused, default=False)
-    if window == "auto":
-        if alg.uses_window:
-            assert isinstance(g, Graph)
-            window = adaptive_window(g)
-        else:
-            window = 128               # inert static arg (e.g. JPL)
-    ig = (alg.prepare(g, priority=priority, plan=resolve_plan(g, layout))
-          if isinstance(g, Graph) else g)
-    n = ig.n_nodes
-    pol = policy or make_policy(mode, h)
-    caps = bucket_capacities(n, ratio=bucket_ratio)
-    force_hub = ipgc.force_hub_enabled()
-    dense_fn, sparse_fn = alg.step_fns(fused)
-
-    colors, aux, wl = alg.init_state(ig)
-    count = n
-
-    trace: list[str] = []
-    counts: list[int] = []
-    tti: list[float] = []
-    t_start = time.perf_counter()
-    it = 0
-    while count > 0 and it < max_iter:
-        use_dense = bool(pol(count, n))
-        counts.append(count)
-        with Timer() as t:
-            if use_dense:
-                colors, aux, wl = dense_fn(
-                    ig, colors, aux, wl, window=window, impl=impl,
-                    force_hub=force_hub)
-            else:
-                cap = pick_bucket(caps, count)
-                if wl.capacity > cap:
-                    wl = resize_items(wl, cap, n)
-                colors, aux, wl = sparse_fn(
-                    ig, colors, aux, wl, window=window, impl=impl,
-                    force_hub=force_hub)
-            count = int(wl.count)  # the Pipe's single scalar read-back
-        trace.append("D" if use_dense else "S")
-        if collect_tti:
-            tti.append(t.seconds)
-        if isinstance(pol, AutoTuned):
-            pol.observe(use_dense, counts[-1], n, t.seconds)
-        it += 1
-
-    total = time.perf_counter() - t_start
-    final, n_colors = alg.finalize(np.asarray(colors[:n]))
-    return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
-                          mode_trace="".join(trace), counts=counts, tti=tti,
-                          total_seconds=total, host_dispatches=it)
+    # thin dispatcher: translate the legacy keyword surface into an
+    # ExecutionSpec and run it on the process-default session (the one
+    # keyed compile cache shared by all three regimes — DESIGN.md §9).
+    # lazy import: repro.exec imports this module at import time
+    from repro.exec import default_session, spec_for
+    spec = spec_for(mode=mode, algo=algo, h=h, window=window, impl=impl,
+                    bucket_ratio=bucket_ratio, max_iter=max_iter,
+                    priority=priority, fused=fused, outline=outline,
+                    n_shards=n_shards, layout=layout)
+    return default_session().run(spec, g, policy=policy,
+                                 collect_tti=collect_tti)
 
 
 # ---------------------------------------------------------------------------
 # device-resident hybrid Pipe (iteration outlining with bucket exits)
 # ---------------------------------------------------------------------------
-
-def _chunk_impl(ig, colors, aux, wl, thresh, low, max_iter, it0, nd0, ns0,
-                *, algo=None, window: int, impl: str, fused: bool,
-                force_hub: bool, branch: str):
-    """One device program: while_loop over hybrid iterations at a static
-    capacity bucket. Each trip picks dense vs sparse via ``lax.cond`` on the
-    on-device count; the loop exits when the count crosses ``low`` (the next
-    bucket boundary) so the host can re-dispatch at a smaller static shape.
-
-    ``algo`` is a static (hashable) Algorithm whose step impls trace into
-    the loop body; ``None`` resolves to IPGC — the pre-subsystem jaxpr.
-
-    ``branch`` is a host-side specialisation: when the whole chunk provably
-    runs one mode (its count range ``(low, cap]`` sits entirely on one side
-    of the threshold — true for every chunk except the one containing the H
-    flip), the conditional is compiled out so XLA sees a straight-line loop
-    body.
-    """
-    if algo is None:
-        dense_fn = (ipgc.fused_dense_step_impl if fused
-                    else ipgc.dense_step_impl)
-        sparse_fn = (ipgc.fused_sparse_step_impl if fused
-                     else ipgc.sparse_step_impl)
-    else:
-        dense_fn, sparse_fn = algo.step_impls(fused)
-    step_kw = dict(window=window, impl=impl, force_hub=force_hub)
-
-    def cond(state):
-        _, _, wl, it, _, _ = state
-        return (wl.count > 0) & (it < max_iter) & (wl.count > low)
-
-    def body(state):
-        colors, aux, wl, it, nd, ns = state
-        if branch == "dense":
-            use_dense = jnp.asarray(True)
-            colors, aux, wl = dense_fn(ig, colors, aux, wl, **step_kw)
-        elif branch == "sparse":
-            use_dense = jnp.asarray(False)
-            colors, aux, wl = sparse_fn(ig, colors, aux, wl, **step_kw)
-        else:
-            use_dense = wl.count > thresh
-            colors, aux, wl = jax.lax.cond(
-                use_dense,
-                lambda c, b, w: dense_fn(ig, c, b, w, **step_kw),
-                lambda c, b, w: sparse_fn(ig, c, b, w, **step_kw),
-                colors, aux, wl)
-        d = use_dense.astype(jnp.int32)
-        return colors, aux, wl, it + 1, nd + d, ns + (1 - d)
-
-    return jax.lax.while_loop(
-        cond, body, (colors, aux, wl, it0, nd0, ns0))
-
-
-_hybrid_chunk = jax.jit(
-    _chunk_impl,
-    static_argnames=("algo", "window", "impl", "fused", "force_hub",
-                     "branch"))
 
 
 def color_outlined_hybrid(
@@ -301,81 +214,17 @@ def color_outlined_hybrid(
     where neighbour-gather bandwidth dominates (TPU), while their deferred
     resolve costs a few extra iterations — a bad trade on the CPU jnp path,
     where the forbidden-bitmap scatter dominates (DESIGN.md §5).
+
+    Thin dispatcher over the unified session (DESIGN.md §9); the chunk
+    program lives in ``repro.exec.session`` (jaxpr-identical move).
     """
-    from repro.algos import get_algorithm
-    from repro.algos.ipgc_algo import IPGC
-    alg = get_algorithm(algo)
-    fused = alg.resolve_fused(fused, default=jax.default_backend() == "tpu")
-    if window == "auto":
-        if alg.uses_window:
-            assert isinstance(g, Graph)
-            window = adaptive_window(g)
-        else:
-            window = 128               # inert static arg (e.g. JPL)
-    ig = (alg.prepare(g, priority=priority, plan=resolve_plan(g, layout))
-          if isinstance(g, Graph) else g)
-    n = ig.n_nodes
-    pol = policy or make_policy(mode, h)
-    caps = bucket_capacities(n, ratio=bucket_ratio)
-    lows = chunk_lower_bounds(caps)
-    force_hub = ipgc.force_hub_enabled()
-    # None keeps the pre-subsystem IPGC jit specialisation (bit-identical).
-    # Dataclass equality (not the name string) guards the substitution: a
-    # subclass or re-registered variant under the name "ipgc" compares
-    # unequal and traces through its own step impls.
-    algo_static = None if alg == IPGC() else alg
-
-    colors, aux, wl = alg.init_state(ig)
-    wl = resize_items(wl, caps[0], n)
-    count = n
-
-    trace: list[str] = []
-    counts: list[int] = []
-    tti: list[float] = []
-    t_start = time.perf_counter()
-    it = 0
-    bi = 0
-    dispatches = 0
-    while count > 0 and it < max_iter:
-        while bi < len(caps) - 1 and caps[bi + 1] >= count:
-            bi += 1
-        wl = resize_items(wl, caps[bi], n)
-        thresh = device_threshold(pol, n)
-        # chunk counts stay in (lows[bi], caps[bi]]: compile out the
-        # dense/sparse cond unless the H flip lands inside this chunk
-        if lows[bi] >= thresh:
-            branch = "dense"
-        elif caps[bi] <= thresh:
-            branch = "sparse"
-        else:
-            branch = "cond"
-        counts.append(count)
-        dispatches += 1
-        with Timer() as t:
-            colors, aux, wl, it_dev, nd, ns = _hybrid_chunk(
-                ig, colors, aux, wl,
-                jnp.asarray(thresh, jnp.int32),
-                jnp.asarray(lows[bi], jnp.int32),
-                jnp.asarray(max_iter, jnp.int32),
-                jnp.asarray(it, jnp.int32),
-                jnp.asarray(0, jnp.int32),
-                jnp.asarray(0, jnp.int32),
-                algo=algo_static, window=window, impl=impl, fused=fused,
-                force_hub=force_hub, branch=branch)
-            count = int(wl.count)  # the chunk's single scalar read-back
-        nd, ns, new_it = int(nd), int(ns), int(it_dev)
-        trace.append("D" * nd + "S" * ns)
-        if collect_tti:
-            tti.append(t.seconds)
-        if isinstance(pol, AutoTuned):
-            pol.observe_chunk(nd, ns, (counts[-1] + count) / 2, t.seconds)
-        it = new_it
-
-    total = time.perf_counter() - t_start
-    final, n_colors = alg.finalize(np.asarray(colors[:n]))
-    return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
-                          mode_trace="".join(trace), counts=counts, tti=tti,
-                          total_seconds=total, host_dispatches=dispatches)
+    from repro.exec import ExecutionSpec, default_session
+    spec = ExecutionSpec(
+        regime="outlined", mode=mode, algo=algo, layout=layout, h=h,
+        window=window, impl=impl, bucket_ratio=bucket_ratio,
+        max_iter=max_iter, priority=priority, fused=fused)
+    return default_session().run(spec, g, policy=policy,
+                                 collect_tti=collect_tti)
 
 
 def color_outlined(

@@ -28,6 +28,7 @@ phase stays O(C·K + T + C·W) — see DESIGN.md §2.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 
@@ -126,6 +127,63 @@ def prepare(g: Graph, *, priority: str = "hash", plan=None) -> IPGCGraph:
     )
 
 
+def pad_prepared(ig: IPGCGraph, n_pad: int, k_pad: int, t_pad: int,
+                 nh_pad: int) -> IPGCGraph:
+    """Embed a prepared graph into a larger static shape class — the
+    batch-execution contract (DESIGN.md §9).
+
+    Every step impl in this module is *batch-axis safe*: it is built from
+    shape-static jnp ops (gather / scatter-with-drop / ``nonzero(size=)``)
+    with no host-side data-dependent control flow, so ``jax.vmap`` over a
+    lane-stacked ``IPGCGraph`` + state reproduces the unbatched step
+    bit-exactly per lane. ``pad_prepared`` makes lanes stackable: padding
+    is *inert by construction* —
+
+      * pad nodes (rows ``n..n_pad``) have no ELL entries, degree 0 and
+        priority -1; they are nobody's neighbour and never enter the
+        worklist, so their colors stay ``PAD_COLOR`` forever;
+      * the old gather sentinel ``n`` (whose color slot held
+        ``PAD_COLOR``) is remapped to the new sentinel ``n_pad`` in
+        ``ell_idx``/``tail_dst``, preserving pad-lane semantics;
+      * extra tail entries are ``tail_valid=False``; extra hub slots have
+        no tail edges, so their forbidden/conflict rows are all-False
+        (the same neutral row non-hub nodes already gather);
+      * ``hub_slot`` values ``n_hub`` ("not a hub") are remapped to
+        ``nh_pad``, the new neutral row.
+
+    Consequently coloring the padded graph (with pad rows initialized to
+    ``PAD_COLOR`` and excluded from the worklist) is bit-identical to
+    coloring the original — the invariant ``Session.run_batch`` is built
+    on (tests/test_exec.py).
+    """
+    n, k, nh = ig.n_nodes, ig.ell_width, ig.n_hub
+    t = ig.tail_src.shape[0]
+    assert ig.layout_kind != "csr-segment", \
+        "csr-segment graphs have no batch padding (edge arrays)"
+    assert n_pad >= n and k_pad >= k and t_pad >= t and nh_pad >= nh
+    ell = jnp.where(ig.ell_idx == n, n_pad, ig.ell_idx)
+    ell = jnp.pad(ell, ((0, n_pad - n), (0, k_pad - k)),
+                  constant_values=n_pad)
+    deg = jnp.pad(ig.degrees, (0, n_pad - n))
+    prio = jnp.concatenate([ig.priority[:n],
+                            jnp.full((n_pad + 1 - n,), -1, jnp.int32)])
+    tail_src = jnp.pad(ig.tail_src, (0, t_pad - t))        # clipped rows
+    tail_dst = jnp.pad(jnp.where(ig.tail_dst == n, n_pad, ig.tail_dst),
+                       (0, t_pad - t), constant_values=n_pad)
+    tail_valid = jnp.pad(ig.tail_valid, (0, t_pad - t))
+    tail_slot = jnp.pad(jnp.where(ig.tail_slot == nh, nh_pad, ig.tail_slot),
+                        (0, t_pad - t), constant_values=nh_pad)
+    hub_slot = jnp.pad(jnp.where(ig.hub_slot == nh, nh_pad, ig.hub_slot),
+                       (0, n_pad - n), constant_values=nh_pad)
+    hub_ids = jnp.pad(ig.hub_ids,
+                      (0, max(nh_pad, 1) - ig.hub_ids.shape[0]))
+    return IPGCGraph(
+        n_nodes=n_pad, ell_width=k_pad, n_hub=nh_pad, ell_idx=ell,
+        degrees=deg, priority=prio, tail_src=tail_src, tail_dst=tail_dst,
+        tail_valid=tail_valid, tail_slot=tail_slot, hub_slot=hub_slot,
+        hub_ids=hub_ids, layout_kind=ig.layout_kind)
+
+
 # Read the env var ONCE at import (it used to be re-read on every trace);
 # benchmarks that A/B the hub side-channel use set_force_hub() instead of
 # mutating os.environ, which also keeps the jit cache honest: the engine
@@ -142,6 +200,25 @@ def set_force_hub(value: bool | None) -> None:
 
 def force_hub_enabled() -> bool:
     return _FORCE_HUB_ENV if _force_hub_override is None else _force_hub_override
+
+
+@contextlib.contextmanager
+def forced_hub(value: bool | None):
+    """Scoped hub-side-channel forcing — the context-manager form of
+    ``set_force_hub`` (restores the *previous* override on exit,
+    including the no-override ``None`` state), so A/B tests and
+    benchmarks never leak the toggle::
+
+        with ipgc.forced_hub(True):
+            r = color(g)          # hub side-channel unconditionally on
+    """
+    global _force_hub_override
+    prev = _force_hub_override
+    set_force_hub(value)
+    try:
+        yield
+    finally:
+        _force_hub_override = prev
 
 
 def _force_hub() -> bool:  # kept for back-compat with direct callers

@@ -40,6 +40,25 @@ def full_worklist(n_nodes: int) -> Worklist:
     )
 
 
+def stacked_worklist(real_ns: "list[int]", n_pad: int) -> Worklist:
+    """Lane-stacked worklists for batched execution (DESIGN.md §9).
+
+    Lane ``i`` starts with graph ``i``'s full worklist (its first
+    ``real_ns[i]`` nodes active) embedded in the shared ``n_pad`` shape
+    class: pad rows are inactive in ``mask`` and hold the ``n_pad``
+    sentinel in ``items``, so a ``vmap``-ed step sees, per lane, exactly
+    the state ``full_worklist(real_n)`` would produce after a resize to
+    capacity ``n_pad``. ``count`` is per-lane — the batched Pipe runs
+    until every lane's count drains.
+    """
+    lanes = jnp.arange(n_pad, dtype=jnp.int32)
+    ns = jnp.asarray(real_ns, dtype=jnp.int32)[:, None]    # (B, 1)
+    mask = lanes[None, :] < ns
+    items = jnp.where(mask, lanes[None, :], n_pad).astype(jnp.int32)
+    return Worklist(mask=mask, items=items,
+                    count=jnp.asarray(real_ns, dtype=jnp.int32))
+
+
 def compact_mask(mask: jax.Array, capacity: int, n_nodes: int) -> tuple[jax.Array, jax.Array]:
     """Dense mask -> compacted items (the atomic-push replacement).
 

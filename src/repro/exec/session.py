@@ -1,0 +1,493 @@
+"""Unified execution sessions — ONE executor behind the three Pipes.
+
+The paper's contribution is a single persistent-worklist Pipe whose
+dispatch regime varies per iteration; the repo grew three regimes as
+separate drivers with three disjoint compile caches (the host loop's
+per-call step jits, the outlined chunk jit, and the distributed driver's
+caller-threaded ``steps_cache`` dict). A ``Session`` owns ONE keyed
+compile cache for all of them (DESIGN.md §9):
+
+  * ``Session.run(spec, g)`` executes an ``ExecutionSpec`` (spec.py) in
+    its declared regime — host loop, device-resident outlined chunks, or
+    the sharded Pipe — reusing every prepared/compiled artifact the
+    session has seen for the same ``spec.static_key() x graph`` pair.
+    The legacy entry points (``engine.color``, ``color_outlined_hybrid``,
+    ``color_distributed``) are thin dispatchers over this method and stay
+    bit-identical: same colors, iterations, mode trace, host-dispatch and
+    exchange counts (tests/test_exec.py re-runs the equivalence suites'
+    contracts through the session layer).
+  * ``Session.run_batch(spec, graphs)`` colors MANY graphs in one device
+    dispatch (exec/batch.py): graphs are padded into shape-class buckets
+    and the step runs ``vmap``-ed over lanes inside a single
+    ``lax.while_loop`` until every lane drains — the serving-scale
+    workload the unified cache exists for.
+  * ``Session.stats`` counts cache hits/misses so warm-vs-cold behaviour
+    is observable (``bench_engine_modes --serve`` records it).
+
+Cache-key discipline: an entry is keyed on the spec's static fields plus
+the graph's identity (``id(g)`` + static shape fields — the entry pins
+the graph object, so ids cannot be recycled while the entry lives).
+Prepare entries are shared across the host and outlined regimes (same
+prepared ``IPGCGraph``); distributed entries carry the partitioned graph
+and the shard_map'd step closures that ``color_distributed`` used to
+stash in its ad-hoc ``steps_cache`` dict — passing that legacy dict still
+works: it simply becomes the backing store of a Session.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ipgc
+from repro.core.engine import (ColoringResult, adaptive_window,
+                               resolve_plan)
+from repro.core.policy import (AutoTuned, Policy, Timer, device_threshold,
+                               make_policy)
+from repro.core.worklist import (bucket_capacities, chunk_lower_bounds,
+                                 pick_bucket, resize_items)
+from repro.exec.spec import ExecutionSpec
+from repro.graphs.csr import Graph
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Hit/miss counters for the session's unified compile cache."""
+
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": round(self.hit_rate, 4)}
+
+    def reset(self) -> None:
+        self.hits = 0
+        self.misses = 0
+
+
+def _graph_key(g) -> tuple:
+    """Graph half of the unified cache key: identity + static fields.
+
+    ``id(g)`` disambiguates same-named graphs; every cache entry stores a
+    reference to ``g``, so the id cannot be recycled while it is live.
+    """
+    if isinstance(g, Graph):
+        return ("graph", id(g), g.name, g.n_nodes, g.n_edges)
+    return ("ig", id(g), g.n_nodes, g.ell_width, g.n_hub, g.layout_kind)
+
+
+class Session:
+    """One keyed compile cache + driver loops for all dispatch regimes.
+
+    ``max_entries`` bounds the cache FIFO-style (oldest entry evicted
+    first): entries pin their graph objects, so an unbounded session
+    serving an endless stream of *distinct* graphs would grow without
+    limit. ``None`` (the default for explicitly-constructed sessions and
+    legacy ``steps_cache`` dicts) keeps every entry, matching the
+    historical caching contracts; ``default_session()`` — the store
+    behind plain ``engine.color`` calls — is bounded.
+    """
+
+    def __init__(self, cache: dict | None = None,
+                 max_entries: int | None = None):
+        #: the unified cache. Passing ``color_distributed``'s legacy
+        #: ``steps_cache`` dict here makes that dict the backing store.
+        self.cache: dict = {} if cache is None else cache
+        self.max_entries = max_entries
+        self.stats = CacheStats()
+
+    def cached(self, key: tuple, build):
+        """Single lookup point — every compiled/prepared artifact in every
+        regime goes through here, so ``stats`` reflects true reuse."""
+        try:
+            entry = self.cache[key]
+        except KeyError:
+            self.stats.misses += 1
+            entry = self.cache[key] = build()
+            if self.max_entries is not None:
+                while len(self.cache) > self.max_entries:
+                    # FIFO eviction: dicts preserve insertion order and
+                    # the entry just added is last, so it never evicts
+                    # itself
+                    self.cache.pop(next(iter(self.cache)))
+            return entry
+        self.stats.hits += 1
+        return entry
+
+    # -- public API ----------------------------------------------------------
+
+    def run(self, spec: ExecutionSpec, g, *, policy: Policy | None = None,
+            collect_tti: bool = False, mesh=None,
+            node_axes: tuple = ("data",)) -> ColoringResult:
+        """Execute ``spec`` on one graph in its declared regime."""
+        if spec.regime == "dist":
+            return self._run_dist(spec, g, policy=policy,
+                                  collect_tti=collect_tti, mesh=mesh,
+                                  node_axes=node_axes)
+        if spec.regime == "outlined":
+            return self._run_outlined(spec, g, policy=policy,
+                                      collect_tti=collect_tti)
+        return self._run_host(spec, g, policy=policy,
+                              collect_tti=collect_tti)
+
+    def run_batch(self, spec: ExecutionSpec, graphs,
+                  *, map_to_original: bool = False) -> list[ColoringResult]:
+        """Color MANY graphs in one (or few) device dispatches.
+
+        See exec/batch.py for the shape-class bucketing contract; results
+        come back in input order, bit-identical to ``run(spec_host, g)``
+        per graph (spec_host = the same spec in the host regime).
+        ``map_to_original=True`` additionally maps each lane's colors
+        back through its graph's ``Permutation`` (reordered pipelines).
+        """
+        from repro.exec import batch as _batch
+        return _batch.run_batch(self, spec, graphs,
+                                map_to_original=map_to_original)
+
+    # -- shared preparation --------------------------------------------------
+
+    def _prepare(self, spec: ExecutionSpec, g, alg):
+        """(graph ref, prepared IPGCGraph, resolved window) — cached, and
+        shared between the host and outlined regimes (the prepared graph
+        does not depend on the dispatch regime)."""
+        if isinstance(g, ipgc.IPGCGraph):
+            # already prepared by the caller; only the window resolves
+            # (auto needs the host Graph, exactly like the legacy engine)
+            window = spec.window
+            if window == "auto":
+                assert not alg.uses_window, \
+                    "window='auto' needs a host Graph for this algorithm"
+                window = 128
+            return g, g, window
+        plan = resolve_plan(g, spec.layout)
+        key = ("prep", _graph_key(g), alg, spec.priority, plan, spec.window)
+
+        def build():
+            if spec.window == "auto":
+                window = adaptive_window(g) if alg.uses_window else 128
+            else:
+                window = spec.window
+            ig = alg.prepare(g, priority=spec.priority, plan=plan)
+            return g, ig, window
+
+        return self.cached(key, build)
+
+    # -- host-loop Pipe (the regime of the seed engine) ----------------------
+
+    def _run_host(self, spec: ExecutionSpec, g, *, policy, collect_tti
+                  ) -> ColoringResult:
+        alg = spec.resolved_algo()
+        fused = alg.resolve_fused(spec.fused, default=False)
+        _, ig, window = self._prepare(spec, g, alg)
+        n = ig.n_nodes
+        pol = policy or make_policy(spec.mode, spec.h)
+        caps = bucket_capacities(n, ratio=spec.bucket_ratio)
+        force_hub = ipgc.force_hub_enabled()
+        dense_fn, sparse_fn = alg.step_fns(fused)
+
+        colors, aux, wl = alg.init_state(ig)
+        count = n
+
+        trace: list[str] = []
+        counts: list[int] = []
+        tti: list[float] = []
+        t_start = time.perf_counter()
+        it = 0
+        while count > 0 and it < spec.max_iter:
+            use_dense = bool(pol(count, n))
+            counts.append(count)
+            with Timer() as t:
+                if use_dense:
+                    colors, aux, wl = dense_fn(
+                        ig, colors, aux, wl, window=window, impl=spec.impl,
+                        force_hub=force_hub)
+                else:
+                    cap = pick_bucket(caps, count)
+                    if wl.capacity > cap:
+                        wl = resize_items(wl, cap, n)
+                    colors, aux, wl = sparse_fn(
+                        ig, colors, aux, wl, window=window, impl=spec.impl,
+                        force_hub=force_hub)
+                count = int(wl.count)  # the Pipe's single scalar read-back
+            trace.append("D" if use_dense else "S")
+            if collect_tti:
+                tti.append(t.seconds)
+            if isinstance(pol, AutoTuned):
+                pol.observe(use_dense, counts[-1], n, t.seconds)
+            it += 1
+
+        total = time.perf_counter() - t_start
+        final, n_colors = alg.finalize(np.asarray(colors[:n]))
+        return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
+                              mode_trace="".join(trace), counts=counts,
+                              tti=tti, total_seconds=total,
+                              host_dispatches=it)
+
+    # -- device-resident outlined Pipe ---------------------------------------
+
+    def _run_outlined(self, spec: ExecutionSpec, g, *, policy, collect_tti
+                      ) -> ColoringResult:
+        from repro.algos.ipgc_algo import IPGC
+        alg = spec.resolved_algo()
+        fused = alg.resolve_fused(spec.fused,
+                                  default=jax.default_backend() == "tpu")
+        _, ig, window = self._prepare(spec, g, alg)
+        n = ig.n_nodes
+        pol = policy or make_policy(spec.mode, spec.h)
+        caps = bucket_capacities(n, ratio=spec.bucket_ratio)
+        lows = chunk_lower_bounds(caps)
+        force_hub = ipgc.force_hub_enabled()
+        # None keeps the pre-subsystem IPGC jit specialisation
+        # (bit-identical). Dataclass equality (not the name string) guards
+        # the substitution: a subclass or re-registered variant under the
+        # name "ipgc" compares unequal and traces its own step impls.
+        algo_static = None if alg == IPGC() else alg
+
+        colors, aux, wl = alg.init_state(ig)
+        wl = resize_items(wl, caps[0], n)
+        count = n
+
+        trace: list[str] = []
+        counts: list[int] = []
+        tti: list[float] = []
+        t_start = time.perf_counter()
+        it = 0
+        bi = 0
+        dispatches = 0
+        while count > 0 and it < spec.max_iter:
+            while bi < len(caps) - 1 and caps[bi + 1] >= count:
+                bi += 1
+            wl = resize_items(wl, caps[bi], n)
+            thresh = device_threshold(pol, n)
+            # chunk counts stay in (lows[bi], caps[bi]]: compile out the
+            # dense/sparse cond unless the H flip lands inside this chunk
+            if lows[bi] >= thresh:
+                branch = "dense"
+            elif caps[bi] <= thresh:
+                branch = "sparse"
+            else:
+                branch = "cond"
+            counts.append(count)
+            dispatches += 1
+            with Timer() as t:
+                colors, aux, wl, it_dev, nd, ns = _hybrid_chunk(
+                    ig, colors, aux, wl,
+                    jnp.asarray(thresh, jnp.int32),
+                    jnp.asarray(lows[bi], jnp.int32),
+                    jnp.asarray(spec.max_iter, jnp.int32),
+                    jnp.asarray(it, jnp.int32),
+                    jnp.asarray(0, jnp.int32),
+                    jnp.asarray(0, jnp.int32),
+                    algo=algo_static, window=window, impl=spec.impl,
+                    fused=fused, force_hub=force_hub, branch=branch)
+                count = int(wl.count)  # the chunk's single scalar read-back
+            nd, ns, new_it = int(nd), int(ns), int(it_dev)
+            trace.append("D" * nd + "S" * ns)
+            if collect_tti:
+                tti.append(t.seconds)
+            if isinstance(pol, AutoTuned):
+                pol.observe_chunk(nd, ns, (counts[-1] + count) / 2,
+                                  t.seconds)
+            it = new_it
+
+        total = time.perf_counter() - t_start
+        final, n_colors = alg.finalize(np.asarray(colors[:n]))
+        return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
+                              mode_trace="".join(trace), counts=counts,
+                              tti=tti, total_seconds=total,
+                              host_dispatches=dispatches)
+
+    # -- sharded distributed Pipe --------------------------------------------
+
+    def _run_dist(self, spec: ExecutionSpec, g, *, policy, collect_tti,
+                  mesh, node_axes) -> ColoringResult:
+        from repro.core.distributed import make_dist_resize
+        from repro.graphs.partition import prepare_partition
+        alg = spec.resolved_algo()
+        if not alg.shard_safe:
+            raise ValueError(
+                f"algorithm {alg.name!r} is not shard-safe: "
+                f"{alg.shard_unsafe_reason or 'no distributed steps'}")
+        assert isinstance(g, Graph), "color_distributed needs a host Graph"
+        plan = resolve_plan(g, spec.layout)
+        if plan is not None and plan.kind == "csr-segment":
+            raise NotImplementedError(
+                "csr-segment execution has no shard_map steps (the "
+                "edge-wise segment scatter is not owner-local); pass "
+                "layout='ell-tail' to run this graph's ELL+tail arrays "
+                "under the sharded Pipe")
+        fused = alg.resolve_fused(spec.fused, default=True)
+        custom_mesh = mesh is not None
+        n_shards = spec.n_shards
+        if mesh is None:
+            if n_shards is None:
+                n_shards = jax.device_count()
+            mesh = jax.make_mesh((n_shards,), node_axes)
+        else:
+            n_shards = math.prod(mesh.shape[a] for a in node_axes)
+        # auto-built meshes over the same device set are interchangeable;
+        # a caller-provided mesh is cached by identity (steps close over
+        # it). The algorithm and plan join as frozen instances. Unlike
+        # the prep entries, the graph joins by CONTENT (name + static
+        # sizes) — the legacy steps_cache contract: a caller that
+        # rebuilds an equal Graph per request must still reuse the
+        # partitioned graph and jitted shard_map steps.
+        key = ("dist", g.name, g.n_nodes, g.n_edges, n_shards, node_axes,
+               spec.window, spec.priority, fused, spec.balance, alg, plan,
+               id(mesh) if custom_mesh else None)
+
+        def build():
+            g2, new_of_old = prepare_partition(g, n_shards,
+                                               balance=spec.balance)
+            if spec.window == "auto":
+                window = adaptive_window(g2) if alg.uses_window else 128
+            else:
+                window = spec.window
+            ig = alg.prepare(g2, priority=spec.priority, plan=plan)
+            dense_fn, sparse_fn = alg.make_dist_steps(
+                ig, mesh, node_axes, window=window, fused=fused)
+            resize_fn = make_dist_resize(mesh, node_axes, ig.n_nodes)
+            return (g, g2, new_of_old, ig, window, dense_fn, sparse_fn,
+                    resize_fn)
+
+        (_, g2, new_of_old, ig, window, dense_fn, sparse_fn,
+         resize_fn) = self.cached(key, build)
+        n = ig.n_nodes
+        block = n // n_shards
+        pol = policy or make_policy(spec.mode, spec.h)
+        caps = bucket_capacities(block, ratio=spec.bucket_ratio)
+
+        colors, base, wl = alg.init_state(ig)
+        count = n
+
+        trace: list[str] = []
+        counts: list[int] = []
+        tti: list[float] = []
+        t_start = time.perf_counter()
+        it = 0
+        while count > 0 and it < spec.max_iter:
+            use_dense = bool(pol(count, n))
+            counts.append(count)
+            with Timer() as t:
+                if use_dense:
+                    colors, base, wl = dense_fn(colors, base, wl)
+                else:
+                    # any shard's live count is <= min(global count, block)
+                    cap = pick_bucket(caps, min(count, block))
+                    if wl.items.shape[0] > n_shards * cap:
+                        wl = resize_fn(wl, cap)
+                    colors, base, wl = sparse_fn(colors, base, wl)
+                count = int(wl.count)  # the Pipe's single scalar read-back
+            trace.append("D" if use_dense else "S")
+            if collect_tti:
+                tti.append(t.seconds)
+            if isinstance(pol, AutoTuned):
+                pol.observe(use_dense, counts[-1], n, t.seconds)
+            it += 1
+
+        total = time.perf_counter() - t_start
+        full = np.asarray(colors[:n])
+        final = full[new_of_old[:g.n_nodes]]   # back to original labels
+        final, n_colors = alg.finalize(final)
+        return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
+                              mode_trace="".join(trace), counts=counts,
+                              tti=tti, total_seconds=total,
+                              host_dispatches=it)
+
+
+# ---------------------------------------------------------------------------
+# the outlined chunk program (moved from core/engine.py, jaxpr-identical)
+# ---------------------------------------------------------------------------
+
+def _chunk_impl(ig, colors, aux, wl, thresh, low, max_iter, it0, nd0, ns0,
+                *, algo=None, window: int, impl: str, fused: bool,
+                force_hub: bool, branch: str):
+    """One device program: while_loop over hybrid iterations at a static
+    capacity bucket. Each trip picks dense vs sparse via ``lax.cond`` on
+    the on-device count; the loop exits when the count crosses ``low``
+    (the next bucket boundary) so the host can re-dispatch at a smaller
+    static shape.
+
+    ``algo`` is a static (hashable) Algorithm whose step impls trace into
+    the loop body; ``None`` resolves to IPGC — the pre-subsystem jaxpr.
+
+    ``branch`` is a host-side specialisation: when the whole chunk
+    provably runs one mode (its count range ``(low, cap]`` sits entirely
+    on one side of the threshold — true for every chunk except the one
+    containing the H flip), the conditional is compiled out so XLA sees a
+    straight-line loop body.
+    """
+    if algo is None:
+        dense_fn = (ipgc.fused_dense_step_impl if fused
+                    else ipgc.dense_step_impl)
+        sparse_fn = (ipgc.fused_sparse_step_impl if fused
+                     else ipgc.sparse_step_impl)
+    else:
+        dense_fn, sparse_fn = algo.step_impls(fused)
+    step_kw = dict(window=window, impl=impl, force_hub=force_hub)
+
+    def cond(state):
+        _, _, wl, it, _, _ = state
+        return (wl.count > 0) & (it < max_iter) & (wl.count > low)
+
+    def body(state):
+        colors, aux, wl, it, nd, ns = state
+        if branch == "dense":
+            use_dense = jnp.asarray(True)
+            colors, aux, wl = dense_fn(ig, colors, aux, wl, **step_kw)
+        elif branch == "sparse":
+            use_dense = jnp.asarray(False)
+            colors, aux, wl = sparse_fn(ig, colors, aux, wl, **step_kw)
+        else:
+            use_dense = wl.count > thresh
+            colors, aux, wl = jax.lax.cond(
+                use_dense,
+                lambda c, b, w: dense_fn(ig, c, b, w, **step_kw),
+                lambda c, b, w: sparse_fn(ig, c, b, w, **step_kw),
+                colors, aux, wl)
+        d = use_dense.astype(jnp.int32)
+        return colors, aux, wl, it + 1, nd + d, ns + (1 - d)
+
+    return jax.lax.while_loop(
+        cond, body, (colors, aux, wl, it0, nd0, ns0))
+
+
+_hybrid_chunk = jax.jit(
+    _chunk_impl,
+    static_argnames=("algo", "window", "impl", "fused", "force_hub",
+                     "branch"))
+
+
+# ---------------------------------------------------------------------------
+# process-default session (the one the thin legacy dispatchers share)
+# ---------------------------------------------------------------------------
+
+_DEFAULT_SESSION: Session | None = None
+
+
+def default_session() -> Session:
+    """The process-wide session the legacy entry points run through, so
+    plain ``engine.color`` calls amortize preparation across requests."""
+    global _DEFAULT_SESSION
+    if _DEFAULT_SESSION is None:
+        # bounded: entries pin graphs, and nothing ever clears the
+        # process-default store — an endless stream of distinct graphs
+        # through plain engine.color must not grow memory without limit
+        _DEFAULT_SESSION = Session(max_entries=256)
+    return _DEFAULT_SESSION
+
+
+def reset_default_session() -> None:
+    """Drop the process-default session (tests; frees pinned graphs)."""
+    global _DEFAULT_SESSION
+    _DEFAULT_SESSION = None

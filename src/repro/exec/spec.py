@@ -1,0 +1,119 @@
+"""``ExecutionSpec`` — the frozen description of HOW a coloring runs.
+
+The repo grew three dispatch regimes for the paper's persistent-worklist
+Pipe (DESIGN.md §9): the host loop, the device-resident outlined chunks,
+and the sharded ``shard_map`` driver. Each historically resolved its own
+knobs (algorithm, layout plan, policy mode, fused family, window, bucket
+ratio) from loose keyword arguments, which meant three disjoint compile
+caches and no way to say "this exact configuration" once and reuse it
+across requests.
+
+An ``ExecutionSpec`` freezes the full static configuration:
+
+  regime x mode x algo x layout x policy knobs x fused/outline knobs
+
+Every field is hashable (``algo`` may be an ``Algorithm`` instance and
+``layout`` a ``LayoutPlan`` — both frozen dataclasses), so a spec rides
+jit static arguments and dict keys directly. ``Session`` (session.py)
+keys its unified compile cache on ``spec.static_key() x`` the graph's
+static fields; ``spec_for`` maps the legacy ``engine.color`` keyword
+surface onto a spec so the historical entry points stay bit-identical
+thin dispatchers.
+
+Runtime-only inputs — a caller-supplied ``Policy`` instance (stateful,
+e.g. ``AutoTuned``), ``collect_tti``, a custom mesh — are deliberately
+NOT part of the spec: they never key a compiled artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+REGIMES = ("host", "outlined", "dist")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec:
+    """Static execution configuration shared by every dispatch regime."""
+
+    #: dispatch regime: "host" (per-iteration host loop), "outlined"
+    #: (device-resident lax.while_loop chunks), "dist" (sharded Pipe)
+    regime: str = "host"
+    #: policy mode ("hybrid" / "topology" / "data" / "hybrid-auto"; the
+    #: legacy "dist-*" prefix is accepted and stripped by make_policy)
+    mode: str = "hybrid"
+    #: registry name or frozen Algorithm instance
+    algo: "str | object" = "ipgc"
+    #: engine-level LayoutPlan override (kind string / LayoutPlan / None)
+    layout: "str | object | None" = None
+    h: float = 0.6
+    window: "int | str" = "auto"
+    impl: str = "jnp"
+    bucket_ratio: int = 2
+    max_iter: int = 10_000
+    priority: str = "hash"
+    #: step family; None resolves per regime via Algorithm.resolve_fused
+    fused: "bool | None" = None
+    #: dist regime only: shard count (None = all local devices)
+    n_shards: "int | None" = None
+    #: dist regime only: degree-balance the partition
+    balance: bool = True
+
+    def __post_init__(self):
+        if self.regime not in REGIMES:
+            raise ValueError(
+                f"unknown regime {self.regime!r}; valid: {REGIMES}")
+
+    # -- resolution helpers --------------------------------------------------
+
+    def resolved_algo(self):
+        from repro.algos import get_algorithm
+        return get_algorithm(self.algo)
+
+    def static_key(self) -> tuple:
+        """The spec half of the unified Session cache key (DESIGN.md §9).
+
+        The algorithm joins as its resolved *instance* (frozen dataclass
+        equality — a re-registered variant under the same name must not
+        share cached artifacts) and ``layout`` as given (kind string or
+        frozen ``LayoutPlan``, both hashable).
+        """
+        return (self.regime, self.mode, self.resolved_algo(), self.layout,
+                self.h, self.window, self.impl, self.bucket_ratio,
+                self.max_iter, self.priority, self.fused, self.n_shards,
+                self.balance)
+
+
+def spec_for(
+    *,
+    mode: str = "hybrid",
+    algo: "str | object" = "ipgc",
+    h: float = 0.6,
+    window: "int | str" = "auto",
+    impl: str = "jnp",
+    bucket_ratio: int = 2,
+    max_iter: int = 10_000,
+    priority: str = "hash",
+    fused: "bool | None" = None,
+    outline: "bool | None" = None,
+    n_shards: "int | None" = None,
+    layout: "str | object | None" = None,
+    balance: bool = True,
+) -> ExecutionSpec:
+    """Map the legacy ``engine.color`` keyword surface onto a spec.
+
+    Regime resolution mirrors the historical dispatch exactly:
+    ``mode="dist-*"`` wins, then ``outline`` (None consults
+    ``engine.outline_default()``), else the host loop.
+    """
+    if mode.startswith("dist-"):
+        regime = "dist"
+    else:
+        if outline is None:
+            from repro.core.engine import outline_default
+            outline = outline_default()
+        regime = "outlined" if outline else "host"
+    return ExecutionSpec(
+        regime=regime, mode=mode, algo=algo, layout=layout, h=h,
+        window=window, impl=impl, bucket_ratio=bucket_ratio,
+        max_iter=max_iter, priority=priority, fused=fused,
+        n_shards=n_shards, balance=balance)

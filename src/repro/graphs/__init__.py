@@ -17,5 +17,6 @@ from repro.graphs.generators import SUITE_SPECS, make_suite, make_graph  # noqa:
 from repro.graphs.registry import (  # noqa: F401
     dataset_names,
     get_dataset,
+    get_dataset_batch,
     register_dataset,
 )

@@ -98,6 +98,30 @@ def get_dataset(
     return g
 
 
+def get_dataset_batch(requests, **common) -> "list[Graph]":
+    """Build a list of graphs for batched execution (DESIGN.md §9).
+
+    ``requests`` is an iterable of dataset names or ``(name, overrides)``
+    pairs; ``common`` supplies shared ``get_dataset`` keyword arguments
+    that per-request overrides win over. Every graph comes out of the
+    same pipeline cache, so a serving batch that repeats a (name, scale,
+    seed, ...) cell shares one Graph object — which is exactly what lets
+    ``Session.run_batch`` reuse its padded-lane cache entries::
+
+        graphs = get_dataset_batch(
+            ["europe_osm_s", ("kron_g500-logn21_s", {"seed": 3})],
+            scale=0.02)
+    """
+    out = []
+    for req in requests:
+        if isinstance(req, str):
+            name, overrides = req, {}
+        else:
+            name, overrides = req
+        out.append(get_dataset(name, **{**common, **overrides}))
+    return out
+
+
 def _register_suite() -> None:
     """Pre-register the synthetic Table-I suite under its SUITE_SPECS
     names (the generators module stays the source of truth)."""

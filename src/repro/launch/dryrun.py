@@ -108,7 +108,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     from repro.launch.steps import build_case
 
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
-    t0 = time.time()
+    t0 = time.perf_counter()
     rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
            "variant": variant,
            "n_devices": 512 if multi_pod else 256, "ok": False}
@@ -120,9 +120,9 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
                              donate_argnums=case.donate or ())
             lowered = jitted.lower(*case.args)
-            t_lower = time.time()
+            t_lower = time.perf_counter()
             compiled = lowered.compile()
-            t_compile = time.time()
+            t_compile = time.perf_counter()
         rec["lower_s"] = round(t_lower - t0, 2)
         rec["compile_s"] = round(t_compile - t_lower, 2)
         rec["meta"] = case.meta
@@ -164,7 +164,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         rec["ok"] = True
     except Exception:
         rec["error"] = traceback.format_exc()[-2000:]
-    rec["total_s"] = round(time.time() - t0, 2)
+    rec["total_s"] = round(time.perf_counter() - t0, 2)
 
     os.makedirs(outdir, exist_ok=True)
     suffix = "" if variant == "base" else f"__{variant}"

@@ -10,12 +10,12 @@ prefill and per-token decode latency/throughput.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
+from repro.core.policy import Timer
 from repro.models import transformer as tfm
 
 
@@ -42,32 +42,35 @@ def main() -> None:
     prefill = jax.jit(lambda p, t: tfm.prefill(p, t, cfg, max_len=max_len))
     decode = jax.jit(lambda p, t, c: tfm.decode_step(p, t, c, cfg))
 
-    t0 = time.time()
-    logits, cache = prefill(params, prompts)
-    if args.kv_int8:
-        # re-quantize the prefilled cache (per-(pos, head) absmax scales)
-        from repro.models.attention import KVCache, quantize_kv
-        kq, ks = quantize_kv(cache.k)
-        vq, vs = quantize_kv(cache.v)
-        cache = KVCache(k=kq, v=vq, length=cache.length,
-                        k_scale=ks, v_scale=vs)
-        print("serving with int8 KV cache (2x less decode HBM traffic)")
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    # Timer wraps a monotonic clock (time.perf_counter): serving latency
+    # numbers must not jump with NTP/wall-clock adjustments
+    with Timer() as t:
+        logits, cache = prefill(params, prompts)
+        if args.kv_int8:
+            # re-quantize the prefilled cache (per-(pos, head) absmax scales)
+            from repro.models.attention import KVCache, quantize_kv
+            kq, ks = quantize_kv(cache.k)
+            vq, vs = quantize_kv(cache.v)
+            cache = KVCache(k=kq, v=vq, length=cache.length,
+                            k_scale=ks, v_scale=vs)
+            print("serving with int8 KV cache (2x less decode HBM traffic)")
+        jax.block_until_ready(logits)
+    t_prefill = t.seconds
     print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
           f"{t_prefill * 1e3:.1f}ms "
           f"({args.batch * args.prompt_len / t_prefill:,.0f} tok/s)")
 
     toks = jnp.argmax(logits, -1)[:, None]
     out = [toks]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        key, sub = jax.random.split(key)
-        logits, cache = decode(params, toks, cache)
-        toks = jax.random.categorical(sub, logits / args.temperature)[:, None]
-        out.append(toks)
-    jax.block_until_ready(toks)
-    dt = time.time() - t0
+    with Timer() as t:
+        for i in range(args.gen - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = decode(params, toks, cache)
+            toks = jax.random.categorical(sub,
+                                          logits / args.temperature)[:, None]
+            out.append(toks)
+        jax.block_until_ready(toks)
+    dt = t.seconds
     per_tok = dt / max(args.gen - 1, 1)
     print(f"decode: {args.gen - 1} steps x batch {args.batch} in {dt:.2f}s "
           f"({per_tok * 1e3:.1f}ms/step, "

@@ -107,7 +107,7 @@ def main() -> None:
     n_par = sum(int(x.size) for x in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_par / 1e6:.1f}M "
           f"steps={args.steps} batch={args.batch}x{args.seq_len}")
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start, args.steps):
         batch = pipe.batch_at(step)
         if args.compress:
@@ -117,7 +117,7 @@ def main() -> None:
         if step % args.log_every == 0 or step == args.steps - 1:
             loss = float(m["loss"])
             tok_s = (step - start + 1) * args.batch * args.seq_len \
-                / (time.time() - t0)
+                / (time.perf_counter() - t0)
             print(f"step {step:5d} loss {loss:.4f} "
                   f"gnorm {float(m['grad_norm']):.3f} tok/s {tok_s:,.0f}",
                   flush=True)

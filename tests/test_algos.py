@@ -283,10 +283,7 @@ def test_jpl_hub_side_channel(graphs):
     """Hub COO-tail priorities must reach the extrema fold: force the hub
     side-channel on a hubless mesh graph and require identical output."""
     g = graphs["europe_osm_s"]
-    try:
-        ipgc.set_force_hub(True)
+    with ipgc.forced_hub(True):
         r_forced = color(g, algo="jpl", outline=False)
-    finally:
-        ipgc.set_force_hub(None)
     r_plain = color(g, algo="jpl", outline=False)
     np.testing.assert_array_equal(r_forced.colors, r_plain.colors)

@@ -73,24 +73,25 @@ def test_outlined_edge_cases():
 
 
 def test_set_outline_default_toggles_after_import(graphs):
-    """The env flag is read once at import; programmatic toggling must go
-    through the cached setter (mirrors ipgc.set_force_hub) and take effect
-    immediately on ``color(outline=None)``."""
-    from repro.core import set_outline_default
+    """The env flag is read once at import; programmatic toggling goes
+    through the ``outlined`` context manager (scoped form of the cached
+    setter, mirrors ipgc.forced_hub) and takes effect immediately on
+    ``color(outline=None)`` — with no leak past the block."""
+    from repro.core import outlined
     from repro.core.engine import outline_default
     g = graphs["europe_osm_s"]
-    try:
-        set_outline_default(True)
+    baseline = outline_default()
+    with outlined(True):
         assert outline_default() is True
         r_on = color(g, mode="hybrid")          # outline=None -> outlined
         assert r_on.host_dispatches < r_on.iterations
-        set_outline_default(False)
-        assert outline_default() is False
-        r_off = color(g, mode="hybrid")         # outline=None -> host loop
-        assert r_off.host_dispatches == r_off.iterations
-        np.testing.assert_array_equal(r_on.colors, r_off.colors)
-    finally:
-        set_outline_default(None)               # reset to the env default
+        with outlined(False):                   # nests and restores
+            assert outline_default() is False
+            r_off = color(g, mode="hybrid")     # outline=None -> host loop
+            assert r_off.host_dispatches == r_off.iterations
+        assert outline_default() is True
+    np.testing.assert_array_equal(r_on.colors, r_off.colors)
+    assert outline_default() is baseline        # nothing leaked
 
 
 def test_outline_flag_on_color(graphs):
