@@ -41,6 +41,14 @@ the inverse permutation before checking).
 
   PYTHONPATH=src python -m benchmarks.bench_engine_modes --layouts
 
+``--kernels`` runs the one-launch kernel leg (DESIGN.md §10) and writes
+``BENCH_kernels.json``: per layout kind the launches/iteration counters,
+engine seconds + n_colors, the autotuner's chosen tile config, and the
+fused+compact vs separate-compact speedup (geomean is the acceptance
+number).
+
+  PYTHONPATH=src python -m benchmarks.bench_engine_modes --kernels
+
 ``--smoke`` is the CI fast path: tiny scale, one run, both engine families
 (combine with --algos for the algos matrix leg, or --layouts for the
 pipeline sweep).
@@ -392,6 +400,163 @@ def bench_serve(scale: float = 0.02, batch_sizes: tuple[int, ...] = (1, 8, 64),
     return report
 
 
+def bench_kernels(scale: float = 0.02, rows: int = 2048, runs: int = 5,
+                  quiet: bool = False,
+                  out_path: str | None = "BENCH_kernels.json") -> dict:
+    """One-launch kernel leg (DESIGN.md §10) -> ``BENCH_kernels.json``.
+
+    Per layout kind: launches/iteration from the trace-time counters
+    (fused vs two-phase), end-to-end engine seconds + n_colors on a
+    kind-shaped suite graph, the autotuner's chosen tile config (with the
+    sweep micros justifying it), and — for the ELL kinds — the warm jitted
+    wall time of ONE fused+compact launch (at the tuned tile) against the
+    separate-compact path it replaces (fused_step kernel at the fixed
+    32-row default + jnp epilogue + compact launch). The geomean of those
+    ratios is the PR-6 acceptance number (>= 1.3x).
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ipgc
+    from repro.core.policy import Timer, measure_launches
+    from repro.core.worklist import full_worklist
+    from repro.kernels import tune
+    from repro.kernels.compact import compact_pallas
+    from repro.kernels.fused_compact import fused_compact_pallas
+    from repro.kernels.fused_step import fused_step_pallas
+    from repro.graphs import make_graph
+
+    interpret = jax.default_backend() != "tpu"
+    window = 128
+
+    def synth_case(hub: bool):
+        rng = np.random.default_rng(0)
+        r, k = rows, 16
+        nc = jnp.asarray(rng.integers(-2, 60, (r, k)).astype(np.int32))
+        npr = jnp.asarray(rng.integers(-1, 100, (r, k)).astype(np.int32))
+        nid = jnp.asarray(rng.integers(0, r + 1, (r, k)).astype(np.int32))
+        base = jnp.zeros((r,), jnp.int32)
+        cu = jnp.asarray(rng.integers(-2, 60, (r,)).astype(np.int32))
+        pu = jnp.asarray(rng.integers(0, 100, (r,)).astype(np.int32))
+        ids = jnp.arange(r, dtype=jnp.int32)
+        active = jnp.asarray(rng.random(r) < 0.8)
+        pending = active & (cu >= 0)
+        extra = jnp.asarray(rng.random((r, window)) < 0.1) if hub else None
+        hl = jnp.asarray(rng.random(r) < 0.05) if hub else None
+        return (nc, npr, nid, base, cu, pu, ids, active, pending, extra, hl)
+
+    def timed(fn):
+        jax.block_until_ready(fn())          # compile
+        jax.block_until_ready(fn())          # warm
+        ts = []
+        for _ in range(runs):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    def kernel_pair(hub: bool, tuned_tile: int):
+        case = synth_case(hub)
+        nc, npr, nid, base, cu, pu, ids, active, pending, extra, hl = case
+
+        @jax.jit
+        def one_launch():
+            return fused_compact_pallas(
+                *case, window, capacity=rows, n_sentinel=rows,
+                tile_rows=tuned_tile, interpret=interpret)
+
+        @jax.jit
+        def separate():
+            # the pre-§10 path: fused kernel (dense hub bitmap always
+            # threaded) + host-side selection + a second compact launch
+            ef = extra if hub else jnp.zeros((rows, window), bool)
+            lose, first = fused_step_pallas(
+                nc, npr, nid, base, cu, pu, ids, pending, ef, window,
+                tile_rows=tune.DEFAULT_TILE_ROWS, interpret=interpret)
+            if hub:
+                lose = lose | (hl & pending)
+            has = first >= 0
+            need = lose | (active & (cu < 0))
+            new_c = jnp.where(need & has, base + first,
+                              jnp.where(lose, -1, cu))
+            new_b = jnp.where(need & ~has, base + window, base)
+            items, count = compact_pallas(need, interpret=interpret)
+            return new_c, new_b, need, items, count
+
+        return timed(one_launch), timed(separate)
+
+    kinds = {
+        "pure-ell": ("europe_osm_s", "pallas"),
+        "ell-tail": ("hollywood-2009_s", "pallas"),
+        "hub-split": ("hollywood-2009_s", "pallas"),
+        "csr-segment": ("hollywood-2009_s", "jnp"),
+    }
+    report: dict = {"scale": scale, "rows": rows,
+                    "backend": jax.default_backend(),
+                    "interpret": interpret, "kinds": {}}
+    ratios, tuned_beats_32 = [], []
+    for kind, (gname, impl) in kinds.items():
+        g = make_graph(gname, scale=scale, layout=kind)
+        ig = ipgc.prepare(g)
+        state = (ipgc.init_colors(ig.n_nodes),
+                 jnp.zeros((ig.n_nodes,), jnp.int32),
+                 full_worklist(ig.n_nodes))
+        cell: dict = {
+            "launches_fused": measure_launches(
+                ipgc.fused_dense_step_impl, ig, *state,
+                window=32, impl=impl),
+            "launches_two_phase": measure_launches(
+                ipgc.dense_step_impl, ig, *state, window=32, impl=impl),
+        }
+
+        color(g, impl=impl, fused=True, outline=False)   # compile pass
+        with Timer() as t_eng:
+            r = color(g, impl=impl, fused=True, outline=False)
+        cell["engine_seconds"] = round(t_eng.seconds, 4)
+        cell["n_colors"] = r.n_colors
+        cell["iterations"] = r.iterations
+        verify_coloring(g, r.colors, context=kind)
+
+        cfg = tune.get_tile_config(kind)
+        cell["tile_config"] = {"tile_rows": cfg.tile_rows,
+                               "micros": cfg.micros}
+        if kind in tune.ELL_KINDS:
+            chosen = cfg.tile_rows or tune.DEFAULT_TILE_ROWS
+            fixed = cfg.micros.get(str(tune.DEFAULT_TILE_ROWS))
+            best = cfg.micros.get(str(chosen))
+            if fixed and best and best < fixed:
+                tuned_beats_32.append(kind)
+            hub = kind in ("ell-tail", "hub-split")
+            t_fused, t_sep = kernel_pair(hub, chosen)
+            ratio = t_sep / t_fused
+            ratios.append(ratio)
+            cell["fused_compact_ms"] = round(t_fused * 1e3, 3)
+            cell["separate_compact_ms"] = round(t_sep * 1e3, 3)
+            cell["speedup_vs_separate"] = round(ratio, 2)
+        if not quiet:
+            print(csv_row(
+                kind, f"{cell['launches_fused']['fused']} launch/iter",
+                f"tile {cfg.tile_rows}",
+                (f"{cell['speedup_vs_separate']}x vs separate"
+                 if "speedup_vs_separate" in cell else "jnp core"),
+                f"{cell['engine_seconds'] * 1e3:.1f}ms/{r.n_colors}c"))
+        report["kinds"][kind] = cell
+    report["fused_compact_geomean_speedup"] = round(geomean(ratios), 2)
+    report["tuned_beats_32_kinds"] = tuned_beats_32
+    if not quiet:
+        print(csv_row("GEOMEAN fused+compact vs separate",
+                      f"{report['fused_compact_geomean_speedup']:.2f}x"),
+              csv_row("tuned tile beats fixed 32 on", *tuned_beats_32))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        if not quiet:
+            print(f"# wrote {out_path}")
+    return report
+
+
 def _reexec_with_devices(argv: list[str], n_devices: int) -> int:
     """Re-exec this module with forced host-platform devices (XLA binds the
     device count at first import, so it cannot be changed in-process).
@@ -439,6 +604,10 @@ def main() -> None:
                     help="warm-session batched serving throughput "
                          "-> BENCH_serve.json")
     ap.add_argument("--serve-out", default="BENCH_serve.json")
+    ap.add_argument("--kernels", action="store_true",
+                    help="one-launch fused+compact kernel leg "
+                         "-> BENCH_kernels.json")
+    ap.add_argument("--kernels-out", default="BENCH_kernels.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI fast path: tiny scale, 1 run, no JSON for the "
                          "host bench, dist bench on 1,2,8 shards (or the "
@@ -446,6 +615,14 @@ def main() -> None:
     args = ap.parse_args()
     shards = tuple(int(s) for s in args.shards.split(","))
 
+    if args.kernels:
+        k_scale, k_rows, k_runs = ((0.01, 2048, 3) if args.smoke
+                                   else (args.scale, 2048, args.runs))
+        print(csv_row("kind", "launches", "tile", "vs separate",
+                      "engine"))
+        bench_kernels(scale=k_scale, rows=k_rows, runs=k_runs,
+                      out_path=args.kernels_out)
+        return
     if args.serve:
         s_scale = 0.005 if args.smoke else args.scale
         print(csv_row("class", "B", "cold", "warm-call", "warm-batch",

@@ -10,7 +10,7 @@ chunked outlining, capacity-bucket ladder, ``Policy`` switching, sharded
 The step contract (shared with the original IPGC steps, so the ``ipgc``
 algorithm is bit-identical to the pre-subsystem engine):
 
-    step(ig, colors, aux, wl, *, window, impl, force_hub)
+    step(ig, colors, aux, wl, *, window, impl, force_hub, tile_rows)
         -> (colors, aux, wl)
 
   * ``ig``     — the prepared device graph (``ipgc.IPGCGraph``; every
@@ -26,6 +26,10 @@ algorithm is bit-identical to the pre-subsystem engine):
 Dense steps sweep all N rows reading ``wl.mask``; sparse steps gather the
 C-capacity ``wl.items``. Both must be shape-static and traceable inside
 ``lax.while_loop`` (the outlined engine runs them as chunk bodies).
+``tile_rows`` is the static Pallas row-tile height resolved by the
+Session from ``ExecutionSpec.tile_rows`` (kernels/tune.py); algorithms
+without a Pallas tile grid accept and ignore it, exactly like JPL
+ignores ``window``.
 
 Shard-safety declaration contract (DESIGN.md §7): an algorithm that sets
 ``shard_safe=True`` promises its ``make_dist_steps`` returns shard_map'd

@@ -62,11 +62,12 @@ def round_hash(x: jax.Array, r: jax.Array) -> jax.Array:
     return (x >> 1).astype(jnp.int32)
 
 
-def _extrema(npr: jax.Array, impl: str) -> tuple[jax.Array, jax.Array]:
+def _extrema(npr: jax.Array, impl: str,
+             tile_rows: int | None = None) -> tuple[jax.Array, jax.Array]:
     """Row-wise (max, masked-min) active-neighbour priority reduction."""
     if impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.jpl_extrema(npr)
+        return kops.jpl_extrema(npr, tile_rows)
     nbr_max = npr.max(axis=1)
     nbr_min = jnp.where(npr >= 0, npr, LARGE).min(axis=1)
     return nbr_max, nbr_min
@@ -95,7 +96,8 @@ def _decide(pend, pr, nbr_max, nbr_min, rnd, cu):
 
 def jpl_dense_step_impl(ig: ipgc.IPGCGraph, colors: jax.Array,
                         rnd: jax.Array, wl: Worklist, *, window: int = 128,
-                        impl: str = "jnp", force_hub: bool | None = None
+                        impl: str = "jnp", force_hub: bool | None = None,
+                        tile_rows: int | None = None
                         ) -> tuple[jax.Array, jax.Array, Worklist]:
     """One topology-driven JPL round over all N rows (``window`` is part of
     the protocol signature but JPL has no mex window — ignored)."""
@@ -108,7 +110,7 @@ def jpl_dense_step_impl(ig: ipgc.IPGCGraph, colors: jax.Array,
     pr_ext = jnp.concatenate([pr, jnp.full((1,), -1, jnp.int32)])
 
     npr = pr_ext[ig.ell_idx]              # (N, K); pad lanes -> -1
-    nbr_max, nbr_min = _extrema(npr, impl)
+    nbr_max, nbr_min = _extrema(npr, impl, tile_rows)
     if ipgc._has_hubs(ig, force_hub):
         tpr = jnp.where(ig.tail_valid, pr_ext[ig.tail_dst], -1)
         hmax, hmin = _hub_extrema(ig, tpr)
@@ -126,7 +128,8 @@ def jpl_dense_step_impl(ig: ipgc.IPGCGraph, colors: jax.Array,
 
 def jpl_sparse_step_impl(ig: ipgc.IPGCGraph, colors: jax.Array,
                          rnd: jax.Array, wl: Worklist, *, window: int = 128,
-                         impl: str = "jnp", force_hub: bool | None = None
+                         impl: str = "jnp", force_hub: bool | None = None,
+                         tile_rows: int | None = None
                          ) -> tuple[jax.Array, jax.Array, Worklist]:
     """One data-driven JPL round over the gathered C-item worklist.
 
@@ -147,7 +150,7 @@ def jpl_sparse_step_impl(ig: ipgc.IPGCGraph, colors: jax.Array,
     ell_rows = jnp.where(valid[:, None], ig.ell_idx[safe], n)    # (C, K)
     nc = ipgc._gather_neighbor_colors(colors, ell_rows)
     npr = jnp.where(nc == NO_COLOR, round_hash(ell_rows, rnd), -1)
-    nbr_max, nbr_min = _extrema(npr, impl)
+    nbr_max, nbr_min = _extrema(npr, impl, tile_rows)
     if ipgc._has_hubs(ig, force_hub):
         tc = colors[ig.tail_dst]
         tpr = jnp.where(ig.tail_valid & (tc == NO_COLOR),
@@ -167,7 +170,7 @@ def jpl_sparse_step_impl(ig: ipgc.IPGCGraph, colors: jax.Array,
     return colors2, rnd + 1, Worklist(mask=mask, items=new_items, count=count)
 
 
-_JPL_STATICS = ("window", "impl", "force_hub")
+_JPL_STATICS = ("window", "impl", "force_hub", "tile_rows")
 jpl_dense_step = jax.jit(jpl_dense_step_impl, static_argnames=_JPL_STATICS)
 jpl_sparse_step = jax.jit(jpl_sparse_step_impl, static_argnames=_JPL_STATICS)
 

@@ -160,6 +160,9 @@ def color(
     outline: bool | None = None,  # None -> set_outline_default()/env default
     n_shards: int | None = None,  # dist-* modes: shard count (None = all)
     layout: "str | object | None" = None,  # LayoutPlan / kind; None = g's plan
+    tile_rows: "int | str | None" = "auto",  # Pallas row-tile height; "auto"
+    #                               consults the persistent tuner
+    #                               (kernels/tune.py) per layout kind
 ) -> ColoringResult:
     # thin dispatcher: translate the legacy keyword surface into an
     # ExecutionSpec and run it on the process-default session (the one
@@ -169,7 +172,7 @@ def color(
     spec = spec_for(mode=mode, algo=algo, h=h, window=window, impl=impl,
                     bucket_ratio=bucket_ratio, max_iter=max_iter,
                     priority=priority, fused=fused, outline=outline,
-                    n_shards=n_shards, layout=layout)
+                    n_shards=n_shards, layout=layout, tile_rows=tile_rows)
     return default_session().run(spec, g, policy=policy,
                                  collect_tti=collect_tti)
 
@@ -194,6 +197,7 @@ def color_outlined_hybrid(
     collect_tti: bool = False,
     fused: bool | None = None,
     layout: "str | object | None" = None,
+    tile_rows: "int | str | None" = "auto",
 ) -> ColoringResult:
     """Device-resident hybrid Pipe: ~O(#buckets) host dispatches total.
 
@@ -222,7 +226,8 @@ def color_outlined_hybrid(
     spec = ExecutionSpec(
         regime="outlined", mode=mode, algo=algo, layout=layout, h=h,
         window=window, impl=impl, bucket_ratio=bucket_ratio,
-        max_iter=max_iter, priority=priority, fused=fused)
+        max_iter=max_iter, priority=priority, fused=fused,
+        tile_rows=tile_rows)
     return default_session().run(spec, g, policy=policy,
                                  collect_tti=collect_tti)
 

@@ -239,9 +239,27 @@ def _has_hubs(ig: IPGCGraph, force_hub: bool | None) -> bool:
 # tracing the raw ``*_impl`` functions with ``jax.eval_shape``.
 GATHER_COUNTS = {"neighbor_colors": 0}
 
+# Kernel-launch accounting (trace-time, like GATHER_COUNTS): every
+# logical device pass a step emits bumps one bucket, so "one iteration is
+# one kernel launch" (DESIGN.md §10) is asserted in tests, not eyeballed.
+#   mex/conflict/compact — the three separate passes of a two-phase step
+#   fused               — a one-launch fused step (assign + resolve +
+#                         worklist emission folded into a single pass:
+#                         the fused+compact Pallas kernel on the ELL
+#                         paths, the one-sweep segment core on
+#                         csr-segment)
+# Inspect by tracing the raw ``*_impl`` functions with ``jax.eval_shape``
+# (see ``core/policy.measure_launches``).
+LAUNCH_COUNTS = {"mex": 0, "conflict": 0, "compact": 0, "fused": 0}
+
 
 def reset_gather_counts() -> None:
     GATHER_COUNTS["neighbor_colors"] = 0
+
+
+def reset_launch_counts() -> None:
+    for k in LAUNCH_COUNTS:
+        LAUNCH_COUNTS[k] = 0
 
 
 def _gather_neighbor_colors(colors: jax.Array, rows: jax.Array) -> jax.Array:
@@ -313,13 +331,15 @@ def _mex_from_forbidden(forb: jax.Array, active: jax.Array,
 
 def _mex_rows(ig: IPGCGraph, nc: jax.Array, base_rows: jax.Array,
               active: jax.Array, colors_rows: jax.Array, extra_forb: jax.Array,
-              window: int, impl: str):
+              window: int, impl: str, tile_rows: int | None = None):
     """Row-wise windowed mex; ``impl`` picks jnp or the Pallas kernel."""
+    LAUNCH_COUNTS["mex"] += 1
     if impl == "pallas":
         from repro.kernels import ops as kops
         if extra_forb is None:
             extra_forb = jnp.zeros((nc.shape[0], window), bool)
-        first, has = kops.mex_window(nc, base_rows, extra_forb, window)
+        first, has = kops.mex_window(nc, base_rows, extra_forb, window,
+                                     tile_rows)
         new_colors = jnp.where(active & has, base_rows + first, colors_rows)
         new_base = jnp.where(active & ~has, base_rows + window, base_rows)
         return new_colors, new_base, active & has
@@ -345,17 +365,20 @@ def _conflict_rows(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
 
 
 def _lose_rows(ig: IPGCGraph, ell_rows: jax.Array, row_ids: jax.Array,
-               colors: jax.Array, newly: jax.Array, impl: str) -> jax.Array:
+               colors: jax.Array, newly: jax.Array, impl: str,
+               tile_rows: int | None = None) -> jax.Array:
     """Row u loses iff it conflicts (see ``_conflict_rows``). Only
     newly-colored rows can conflict (mex excluded all surviving older
     colors)."""
+    LAUNCH_COUNTS["conflict"] += 1
     cu = colors[row_ids]
     pu = ig.priority[row_ids]
     nc = _gather_neighbor_colors(colors, ell_rows)
     npr = ig.priority[ell_rows]
     if impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.conflict(nc, npr, ell_rows, cu, pu, row_ids) & newly
+        return kops.conflict(nc, npr, ell_rows, cu, pu, row_ids,
+                             tile_rows) & newly
     return _conflict_rows(nc, npr, ell_rows, cu, pu, row_ids) & newly
 
 
@@ -417,9 +440,9 @@ def _csr_fused_core(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
     cu = colors[:n]
     pending = active & (cu >= 0)
     ec = _gather_neighbor_colors(colors, ed)             # the ONE gather
-    lose = kcsr.edge_conflict(es, ed, cu[es], ec, ig.priority[es],
-                              ig.priority[ed], n) & pending
-    forb = kcsr.edge_forbidden(es, ec, base[es], n, window)
+    lose, forb = kcsr.edge_fused(es, ed, cu[es], ec, ig.priority[es],
+                                 ig.priority[ed], base[es], n, window)
+    lose = lose & pending
     free = ~forb
     has = free.any(axis=1)
     first = jnp.argmax(free, axis=1).astype(jnp.int32)
@@ -451,6 +474,16 @@ def _csr_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
               wl: Worklist, *, window: int, fused: bool, sparse: bool
               ) -> tuple[jax.Array, jax.Array, Worklist]:
     core = _csr_fused_core if fused else _csr_two_phase_core
+    if fused:
+        # ONE edge-parallel pass: conflict + forbidden come out of a
+        # single sweep over the shared edge gather (kcsr.edge_fused) and
+        # the O(C)/O(N) worklist emission fuses into its epilogue — the
+        # csr analogue of the one-launch fused+compact kernel.
+        LAUNCH_COUNTS["fused"] += 1
+    else:
+        LAUNCH_COUNTS["mex"] += 1
+        LAUNCH_COUNTS["conflict"] += 1
+        LAUNCH_COUNTS["compact"] += 1
     colors2, base2, still = core(ig, colors, base, wl.mask, window=window)
     emit = _csr_emit_sparse if sparse else _csr_emit_dense
     return colors2, base2, emit(wl, still, ig.n_nodes)
@@ -462,7 +495,8 @@ def _csr_step(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
 
 def dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
                     wl: Worklist, *, window: int = 128, impl: str = "jnp",
-                    force_hub: bool | None = None
+                    force_hub: bool | None = None,
+                    tile_rows: int | None = None
                     ) -> tuple[jax.Array, jax.Array, Worklist]:
     if ig.layout_kind == "csr-segment":
         return _csr_step(ig, colors, base, wl, window=window,
@@ -482,11 +516,12 @@ def dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
     else:
         extra = None
     new_c, new_base, newly = _mex_rows(
-        ig, nc, base, active, colors[:n], extra, window, impl)
+        ig, nc, base, active, colors[:n], extra, window, impl, tile_rows)
     colors2 = colors.at[:n].set(new_c)
 
     # --- resolve (uncolor exactly one endpoint per conflict edge) ---
-    lose = _lose_rows(ig, ig.ell_idx, row_ids, colors2, newly, impl)
+    lose = _lose_rows(ig, ig.ell_idx, row_ids, colors2, newly, impl,
+                      tile_rows)
     if has_hubs:
         newly_full = jnp.concatenate([newly, jnp.zeros((1,), bool)])
         hub_l = _hub_lose(ig, colors2, newly_full)
@@ -495,6 +530,7 @@ def dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
 
     # --- maintain the worklist (the paper's contribution: also in dense mode)
     still = lose | (active & ~newly)
+    LAUNCH_COUNTS["compact"] += 1
     items, count = compact_mask(still, wl.items.shape[0], n)
     return colors3, new_base, Worklist(mask=still, items=items, count=count)
 
@@ -505,7 +541,8 @@ def dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
 
 def sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
                      wl: Worklist, *, window: int = 128, impl: str = "jnp",
-                     force_hub: bool | None = None
+                     force_hub: bool | None = None,
+                     tile_rows: int | None = None
                      ) -> tuple[jax.Array, jax.Array, Worklist]:
     if ig.layout_kind == "csr-segment":
         return _csr_step(ig, colors, base, wl, window=window,
@@ -526,7 +563,8 @@ def sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
     else:
         extra = None
     new_c, new_base_rows, newly = _mex_rows(
-        ig, nc, base_rows, valid, colors[safe], extra, window, impl)
+        ig, nc, base_rows, valid, colors[safe], extra, window, impl,
+        tile_rows)
     colors2 = colors.at[jnp.where(valid, items, n)].set(
         jnp.where(valid, new_c, PAD_COLOR))
     colors2 = colors2.at[n].set(PAD_COLOR)
@@ -537,7 +575,7 @@ def sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
 
     # --- resolve ---
     lose = _lose_rows(ig, ell_rows, jnp.where(valid, items, n), colors2,
-                      newly, impl)
+                      newly, impl, tile_rows)
     if has_hubs:
         newly_full = jnp.zeros((n + 1,), bool).at[
             jnp.where(newly, items, n)].set(newly, mode="drop")[: n + 1]
@@ -549,6 +587,7 @@ def sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
 
     # --- maintain the worklist in O(C) ---
     still = lose | (valid & ~newly)
+    LAUNCH_COUNTS["compact"] += 1
     new_items, count = compact_items(items, still, n)
     mask = wl.mask.at[jnp.where(valid, items, n)].set(still, mode="drop")
     return colors3, base2, Worklist(mask=mask, items=new_items, count=count)
@@ -582,15 +621,24 @@ def sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
 def _fused_rows(ig: IPGCGraph, nc: jax.Array, npr: jax.Array,
                 nbr_ids: jax.Array, base_rows: jax.Array, cu: jax.Array,
                 pu: jax.Array, ids: jax.Array, pending: jax.Array,
-                extra_forb: jax.Array | None, window: int, impl: str
+                extra_forb: jax.Array | None, window: int, impl: str,
+                tile_rows: int | None = None
                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Shared row-wise core: (lose_ell, first, has) from one gathered tile."""
+    """Shared row-wise core: (lose_ell, first, has) from one gathered tile.
+
+    Kept for the distributed steps (exec/dist.py), whose worklist
+    emission happens after a cross-shard exchange and so cannot fold into
+    the kernel; the single-device fused steps route through
+    ``_fused_compact_rows`` below instead.
+    """
+    LAUNCH_COUNTS["fused"] += 1
     if impl == "pallas":
         from repro.kernels import ops as kops
         if extra_forb is None:
             extra_forb = jnp.zeros((nc.shape[0], window), bool)
         lose, first = kops.fused_step(nc, npr, nbr_ids, base_rows, cu, pu,
-                                      ids, pending, extra_forb, window)
+                                      ids, pending, extra_forb, window,
+                                      tile_rows)
         return lose, first, first >= 0
     lose = _conflict_rows(nc, npr, nbr_ids, cu, pu, ids) & pending
     forb = _ell_forbidden(nc, base_rows, window)
@@ -602,9 +650,55 @@ def _fused_rows(ig: IPGCGraph, nc: jax.Array, npr: jax.Array,
     return lose, first, has
 
 
+def _fused_compact_rows(ig: IPGCGraph, nc: jax.Array, npr: jax.Array,
+                        nbr_ids: jax.Array, base_rows: jax.Array,
+                        cu: jax.Array, pu: jax.Array, ids: jax.Array,
+                        active: jax.Array, pending: jax.Array,
+                        extra_forb: jax.Array | None,
+                        hub_lose: jax.Array | None, window: int, impl: str,
+                        tile_rows: int | None, capacity: int
+                        ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array, jax.Array]:
+    """ONE-launch row-wise core (DESIGN.md §10): resolve + windowed mex +
+    new-color/base selection + compacted worklist emission in a single
+    pass. ``ids`` is the emitted value, so the dense caller passes row
+    iota (emission == ``compact_mask``) and the sparse caller its items
+    block (emission == ``compact_items``). Returns
+    ``(new_colors, new_base, still, items, count)``.
+    """
+    LAUNCH_COUNTS["fused"] += 1
+    n = ig.n_nodes
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.fused_compact(nc, npr, nbr_ids, base_rows, cu, pu, ids,
+                                  active, pending, extra_forb, hub_lose,
+                                  window, capacity=capacity, n_sentinel=n,
+                                  tile_rows=tile_rows)
+    lose = _conflict_rows(nc, npr, nbr_ids, cu, pu, ids) & pending
+    if hub_lose is not None:
+        lose = lose | (hub_lose & pending)
+    forb = _ell_forbidden(nc, base_rows, window)
+    if extra_forb is not None:
+        forb = forb | extra_forb
+    free = ~forb
+    has = free.any(axis=1)
+    first = jnp.argmax(free, axis=1).astype(jnp.int32)
+    need = lose | (active & (cu < 0))
+    new_c = jnp.where(need & has, base_rows + first,
+                      jnp.where(lose, NO_COLOR, cu))
+    new_base = jnp.where(need & ~has, base_rows + window, base_rows)
+    # folded emission — bit-identical to compact_mask/compact_items over
+    # ``need``: surviving ids ascending, sentinel-n tail, count = popcount
+    (pos,) = jnp.nonzero(need, size=capacity, fill_value=nc.shape[0])
+    ids_ext = jnp.concatenate(
+        [ids.astype(jnp.int32), jnp.full((1,), n, jnp.int32)])
+    return new_c, new_base, need, ids_ext[pos], need.sum(dtype=jnp.int32)
+
+
 def fused_dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
                           wl: Worklist, *, window: int = 128,
-                          impl: str = "jnp", force_hub: bool | None = None
+                          impl: str = "jnp", force_hub: bool | None = None,
+                          tile_rows: int | None = None
                           ) -> tuple[jax.Array, jax.Array, Worklist]:
     if ig.layout_kind == "csr-segment":
         return _csr_step(ig, colors, base, wl, window=window,
@@ -629,24 +723,19 @@ def fused_dense_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
         extra = None
         hub_lose = None
 
-    lose, first, has = _fused_rows(ig, nc, npr, ig.ell_idx, base, cu, pu,
-                                   row_ids, pending, extra, window, impl)
-    if hub_lose is not None:
-        lose = lose | (hub_lose & pending)
-    need = lose | (active & (cu < 0))                  # rows to (re)color
-    new_c = jnp.where(need & has, base + first,
-                      jnp.where(lose, NO_COLOR, cu))
-    new_base = jnp.where(need & ~has, base + window, base)
+    # ONE launch: resolve + assign + worklist emission (emitted value =
+    # row iota, so the compacted items == compact_mask of ``still``)
+    new_c, new_base, still, items, count = _fused_compact_rows(
+        ig, nc, npr, ig.ell_idx, base, cu, pu, row_ids, active, pending,
+        extra, hub_lose, window, impl, tile_rows, wl.items.shape[0])
     colors2 = colors.at[:n].set(new_c)
-
-    still = need                                       # confirmed rows leave
-    items, count = compact_mask(still, wl.items.shape[0], n)
     return colors2, new_base, Worklist(mask=still, items=items, count=count)
 
 
 def fused_sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
                            wl: Worklist, *, window: int = 128,
-                           impl: str = "jnp", force_hub: bool | None = None
+                           impl: str = "jnp", force_hub: bool | None = None,
+                           tile_rows: int | None = None
                            ) -> tuple[jax.Array, jax.Array, Worklist]:
     if ig.layout_kind == "csr-segment":
         return _csr_step(ig, colors, base, wl, window=window,
@@ -676,14 +765,12 @@ def fused_sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
         extra = None
         hub_lose = None
 
-    lose, first, has = _fused_rows(ig, nc, npr, ell_rows, base_rows, cu, pu,
-                                   ids, pending, extra, window, impl)
-    if hub_lose is not None:
-        lose = lose | (hub_lose & pending)
-    need = lose | (valid & (cu < 0))
-    new_c = jnp.where(need & has, base_rows + first,
-                      jnp.where(lose, NO_COLOR, cu))
-    new_base_rows = jnp.where(need & ~has, base_rows + window, base_rows)
+    # ONE launch: emitted value = the items block (invalid rows carry the
+    # sentinel n and are inactive), so the compacted items ==
+    # compact_items of ``still`` over the old block
+    new_c, new_base_rows, still, new_items, count = _fused_compact_rows(
+        ig, nc, npr, ell_rows, base_rows, cu, pu, ids, valid, pending,
+        extra, hub_lose, window, impl, tile_rows, items.shape[0])
 
     colors2 = colors.at[jnp.where(valid, items, n)].set(
         jnp.where(valid, new_c, PAD_COLOR))
@@ -691,15 +778,12 @@ def fused_sparse_step_impl(ig: IPGCGraph, colors: jax.Array, base: jax.Array,
     # padding rows scatter to the dropped index n (see sparse_step_impl)
     base2 = base.at[jnp.where(valid, items, n)].set(new_base_rows,
                                                     mode="drop")
-
-    still = need
-    new_items, count = compact_items(items, still, n)
     mask = wl.mask.at[jnp.where(valid, items, n)].set(still, mode="drop")
     return colors2, base2, Worklist(mask=mask, items=new_items, count=count)
 
 
 # jitted public entry points (``*_impl`` stay traceable for instrumentation)
-_STEP_STATICS = ("window", "impl", "force_hub")
+_STEP_STATICS = ("window", "impl", "force_hub", "tile_rows")
 dense_step = jax.jit(dense_step_impl, static_argnames=_STEP_STATICS)
 sparse_step = jax.jit(sparse_step_impl, static_argnames=_STEP_STATICS)
 fused_dense_step = jax.jit(fused_dense_step_impl, static_argnames=_STEP_STATICS)

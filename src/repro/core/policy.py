@@ -163,3 +163,25 @@ class Timer:
 
     def __exit__(self, *exc):
         self.seconds = time.perf_counter() - self.t0
+
+
+def measure_launches(step_impl, ig, colors, aux, wl, **step_kw) -> dict:
+    """Kernel-launch accounting for ONE step (DESIGN.md §10): trace the
+    *unjitted* step impl under ``jax.eval_shape`` — no device execution —
+    and return the ``ipgc.LAUNCH_COUNTS`` delta it produced.
+
+    The dict maps pass kind -> launches per iteration (``fused`` /
+    ``mex`` / ``conflict`` / ``compact``); a one-launch fused iteration
+    is ``{"fused": 1}`` with every other bucket 0, which is how the
+    engine's "one iteration = one kernel launch" claim is asserted in
+    tests and reported by ``bench_engine_modes --kernels``.
+    """
+    import functools
+    import jax
+
+    from repro.core import ipgc
+
+    before = dict(ipgc.LAUNCH_COUNTS)
+    jax.eval_shape(functools.partial(step_impl, ig, **step_kw),
+                   colors, aux, wl)
+    return {k: ipgc.LAUNCH_COUNTS[k] - before[k] for k in before}

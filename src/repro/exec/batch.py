@@ -108,7 +108,7 @@ def _empty_lane(sc: ShapeClass) -> ipgc.IPGCGraph:
 
 def _batched_chunk_impl(ig, colors, aux, wl, thresh, max_iter, *,
                         algo, window: int, impl: str, fused: bool,
-                        force_hub: bool):
+                        force_hub: bool, tile_rows: "int | None" = None):
     """ONE device program for a whole bucket: the dense-form step vmapped
     over lanes inside a lax.while_loop that runs until every lane drains.
 
@@ -124,7 +124,8 @@ def _batched_chunk_impl(ig, colors, aux, wl, thresh, max_iter, *,
     else:
         dense_fn = algo.step_impls(fused)[0]
     step = jax.vmap(lambda g_, c, a, w: dense_fn(
-        g_, c, a, w, window=window, impl=impl, force_hub=force_hub))
+        g_, c, a, w, window=window, impl=impl, force_hub=force_hub,
+        tile_rows=tile_rows))
 
     def cond(state):
         _, _, wl, trips, _, _, _ = state
@@ -148,7 +149,8 @@ def _batched_chunk_impl(ig, colors, aux, wl, thresh, max_iter, *,
 
 _batched_chunk = jax.jit(
     _batched_chunk_impl,
-    static_argnames=("algo", "window", "impl", "fused", "force_hub"))
+    static_argnames=("algo", "window", "impl", "fused", "force_hub",
+                     "tile_rows"))
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +202,9 @@ def run_batch(session, spec: ExecutionSpec, graphs,
     algo_static = None if alg == IPGC() else alg
     fused = alg.resolve_fused(spec.fused, default=False)  # host-loop default
     force_hub = ipgc.force_hub_enabled()
+    # run_batch is jnp-only, so "auto" resolves to None (no tile grid);
+    # an explicit int still rides the static key like every other regime
+    tile_rows = spec.tile_rows if isinstance(spec.tile_rows, int) else None
     pol = make_policy(spec.mode, spec.h)
 
     prepared = [session._prepare(spec, g, alg) for g in graphs]
@@ -266,14 +271,14 @@ def run_batch(session, spec: ExecutionSpec, graphs,
         # program-cache bookkeeping: a first-seen (shape class, lane
         # count, statics) combination is a compile; repeats are hits
         session.cached(("batch-program", sc, b_pad, algo_static, fused,
-                        force_hub, spec.impl), lambda: True)
+                        force_hub, spec.impl, tile_rows), lambda: True)
 
         with Timer() as t:
             colors, aux, wl, trips, iters, nd, ns = _batched_chunk(
                 stacked, colors0, aux0, wl0, thresh,
                 jnp.asarray(spec.max_iter, jnp.int32),
                 algo=algo_static, window=window, impl=spec.impl,
-                fused=fused, force_hub=force_hub)
+                fused=fused, force_hub=force_hub, tile_rows=tile_rows)
             counts_left = np.asarray(wl.count)   # device sync
         colors_np = np.asarray(colors)
         iters_np, nd_np, ns_np = (np.asarray(iters), np.asarray(nd),

@@ -52,6 +52,7 @@ from repro.core.worklist import (bucket_capacities, chunk_lower_bounds,
                                  pick_bucket, resize_items)
 from repro.exec.spec import ExecutionSpec
 from repro.graphs.csr import Graph
+from repro.kernels.tune import resolve_tile_rows
 
 
 @dataclasses.dataclass
@@ -193,6 +194,8 @@ class Session:
         pol = policy or make_policy(spec.mode, spec.h)
         caps = bucket_capacities(n, ratio=spec.bucket_ratio)
         force_hub = ipgc.force_hub_enabled()
+        tile_rows = resolve_tile_rows(spec.tile_rows, ig.layout_kind,
+                                      spec.impl)
         dense_fn, sparse_fn = alg.step_fns(fused)
 
         colors, aux, wl = alg.init_state(ig)
@@ -210,14 +213,14 @@ class Session:
                 if use_dense:
                     colors, aux, wl = dense_fn(
                         ig, colors, aux, wl, window=window, impl=spec.impl,
-                        force_hub=force_hub)
+                        force_hub=force_hub, tile_rows=tile_rows)
                 else:
                     cap = pick_bucket(caps, count)
                     if wl.capacity > cap:
                         wl = resize_items(wl, cap, n)
                     colors, aux, wl = sparse_fn(
                         ig, colors, aux, wl, window=window, impl=spec.impl,
-                        force_hub=force_hub)
+                        force_hub=force_hub, tile_rows=tile_rows)
                 count = int(wl.count)  # the Pipe's single scalar read-back
             trace.append("D" if use_dense else "S")
             if collect_tti:
@@ -247,6 +250,8 @@ class Session:
         caps = bucket_capacities(n, ratio=spec.bucket_ratio)
         lows = chunk_lower_bounds(caps)
         force_hub = ipgc.force_hub_enabled()
+        tile_rows = resolve_tile_rows(spec.tile_rows, ig.layout_kind,
+                                      spec.impl)
         # None keeps the pre-subsystem IPGC jit specialisation
         # (bit-identical). Dataclass equality (not the name string) guards
         # the substitution: a subclass or re-registered variant under the
@@ -289,7 +294,8 @@ class Session:
                     jnp.asarray(0, jnp.int32),
                     jnp.asarray(0, jnp.int32),
                     algo=algo_static, window=window, impl=spec.impl,
-                    fused=fused, force_hub=force_hub, branch=branch)
+                    fused=fused, force_hub=force_hub, branch=branch,
+                    tile_rows=tile_rows)
                 count = int(wl.count)  # the chunk's single scalar read-back
             nd, ns, new_it = int(nd), int(ns), int(it_dev)
             trace.append("D" * nd + "S" * ns)
@@ -344,7 +350,7 @@ class Session:
         # partitioned graph and jitted shard_map steps.
         key = ("dist", g.name, g.n_nodes, g.n_edges, n_shards, node_axes,
                spec.window, spec.priority, fused, spec.balance, alg, plan,
-               id(mesh) if custom_mesh else None)
+               spec.tile_rows, id(mesh) if custom_mesh else None)
 
         def build():
             g2, new_of_old = prepare_partition(g, n_shards,
@@ -411,7 +417,8 @@ class Session:
 
 def _chunk_impl(ig, colors, aux, wl, thresh, low, max_iter, it0, nd0, ns0,
                 *, algo=None, window: int, impl: str, fused: bool,
-                force_hub: bool, branch: str):
+                force_hub: bool, branch: str,
+                tile_rows: "int | None" = None):
     """One device program: while_loop over hybrid iterations at a static
     capacity bucket. Each trip picks dense vs sparse via ``lax.cond`` on
     the on-device count; the loop exits when the count crosses ``low``
@@ -434,7 +441,8 @@ def _chunk_impl(ig, colors, aux, wl, thresh, low, max_iter, it0, nd0, ns0,
                      else ipgc.sparse_step_impl)
     else:
         dense_fn, sparse_fn = algo.step_impls(fused)
-    step_kw = dict(window=window, impl=impl, force_hub=force_hub)
+    step_kw = dict(window=window, impl=impl, force_hub=force_hub,
+                   tile_rows=tile_rows)
 
     def cond(state):
         _, _, wl, it, _, _ = state
@@ -465,7 +473,7 @@ def _chunk_impl(ig, colors, aux, wl, thresh, low, max_iter, it0, nd0, ns0,
 _hybrid_chunk = jax.jit(
     _chunk_impl,
     static_argnames=("algo", "window", "impl", "fused", "force_hub",
-                     "branch"))
+                     "branch", "tile_rows"))
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,9 @@ class ExecutionSpec:
     n_shards: "int | None" = None
     #: dist regime only: degree-balance the partition
     balance: bool = True
+    #: Pallas row-tile height; "auto" consults kernels/tune.py per
+    #: (backend, layout kind, dtype), an int pins it, None = kernel default
+    tile_rows: "int | str | None" = "auto"
 
     def __post_init__(self):
         if self.regime not in REGIMES:
@@ -80,7 +83,7 @@ class ExecutionSpec:
         return (self.regime, self.mode, self.resolved_algo(), self.layout,
                 self.h, self.window, self.impl, self.bucket_ratio,
                 self.max_iter, self.priority, self.fused, self.n_shards,
-                self.balance)
+                self.balance, self.tile_rows)
 
 
 def spec_for(
@@ -98,6 +101,7 @@ def spec_for(
     n_shards: "int | None" = None,
     layout: "str | object | None" = None,
     balance: bool = True,
+    tile_rows: "int | str | None" = "auto",
 ) -> ExecutionSpec:
     """Map the legacy ``engine.color`` keyword surface onto a spec.
 
@@ -116,4 +120,4 @@ def spec_for(
         regime=regime, mode=mode, algo=algo, layout=layout, h=h,
         window=window, impl=impl, bucket_ratio=bucket_ratio,
         max_iter=max_iter, priority=priority, fused=fused,
-        n_shards=n_shards, balance=balance)
+        n_shards=n_shards, balance=balance, tile_rows=tile_rows)

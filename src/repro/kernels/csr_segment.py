@@ -61,3 +61,20 @@ def edge_conflict(es: jax.Array, ed: jax.Array, cu_e: jax.Array,
               & ((pv_e > pu_e) | ((pv_e == pu_e) & (ed > es))))
     out = jnp.zeros((n_rows + 1,), bool)
     return out.at[jnp.where(lose_e, es, n_rows)].max(lose_e)[:n_rows]
+
+
+def edge_fused(es: jax.Array, ed: jax.Array, cu_e: jax.Array,
+               cv_e: jax.Array, pu_e: jax.Array, pv_e: jax.Array,
+               base_src: jax.Array, n_rows: int, window: int
+               ) -> tuple[jax.Array, jax.Array]:
+    """One-pass edge-parallel core: conflict flags AND forbidden bitmap
+    from a single sweep over the shared edge gathers.
+
+    This is the csr-segment analogue of the one-launch fused+compact
+    kernel (DESIGN.md §10): the edge tuple ``(es, ed, cu_e, cv_e, pu_e,
+    pv_e, base_src)`` is gathered once and feeds both the resolve
+    segment-any and the assign OR-scatter, so a fused csr iteration is a
+    single edge-parallel pass instead of two.
+    """
+    return (edge_conflict(es, ed, cu_e, cv_e, pu_e, pv_e, n_rows),
+            edge_forbidden(es, cv_e, base_src, n_rows, window))

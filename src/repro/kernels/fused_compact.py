@@ -1,0 +1,217 @@
+"""Pallas TPU kernel: ONE-LAUNCH IPGC iteration (assign + resolve +
+worklist compaction in a single grid).
+
+The fused step kernel (``kernels/fused_step.py``) left one extra dispatch
+per iteration: the surviving-node compaction still ran as a separate
+``compact_pallas`` launch, with the intermediate ``still`` mask
+round-tripping through HBM between the two. This kernel folds the
+compaction into the same row-tile grid (DESIGN.md §10), so a dense-mode
+IPGC iteration is exactly one kernel launch:
+
+per (TILE_R,)-row grid step —
+
+  1. resolve: row u loses iff pending and some neighbour holds the same
+     color with a higher (priority, id) pair (plus the precomputed hub
+     COO-tail lose flag), on the resident ``(TILE_R, K)`` tile.
+  2. assign: windowed mex over the SAME tile (forbidden bitmap
+     OR-accumulated per ELL lane, seeded from the hub side-channel);
+     rows that lost or were still uncolored take ``base + first`` or
+     advance their base when the window is exhausted.
+  3. compact: the tile's surviving rows (``still = need``) emit their own
+     ids at a running global offset carried in SMEM across the sequential
+     grid — ``compact.py``'s carry machinery (exclusive prefix sum +
+     one-hot position match + dynamic-offset static-size store), fused
+     rather than re-launched. Each tile's TILE_R-wide store overwrites
+     the junk tail of the previous tile's store, so after the last step
+     positions [0, count) hold exactly the surviving ids in ascending
+     tile order; the wrapper masks positions >= count with the sentinel.
+
+The emitted value is the row's ``ids`` input (not a computed global
+index), so ONE kernel serves both worklist forms: the dense step passes
+``ids = iota(N)`` (emission == ``worklist.compact_mask``) and the sparse
+step passes its items block (emission == ``worklist.compact_items`` —
+invalid rows have ``active = False`` and can never emit).
+
+Grid specialisation by layout kind (DESIGN.md §10): pure-ell graphs call
+the no-hub variant (hub operands compiled out entirely, mirroring the
+static ``_has_hubs`` dispatch); ell-tail / hub-split pass the hub
+side-channel bitmap and lose flags as extra operands. csr-segment does
+not route here — its one-pass edge-parallel core is jnp segment ops
+(``kernels/csr_segment.edge_fused``; see its module docstring for why no
+Pallas variant exists).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _fused_compact_kernel(*refs, window: int, k_width: int, tile_rows: int,
+                          n_grid: int, no_color: int, with_hub: bool):
+    if with_hub:
+        (nc_ref, npr_ref, nid_ref, base_ref, cu_ref, pu_ref, uid_ref,
+         act_ref, pend_ref, extra_ref, hl_ref,
+         newc_ref, newb_ref, still_ref, items_ref, count_ref,
+         carry_ref) = refs
+    else:
+        (nc_ref, npr_ref, nid_ref, base_ref, cu_ref, pu_ref, uid_ref,
+         act_ref, pend_ref,
+         newc_ref, newb_ref, still_ref, items_ref, count_ref,
+         carry_ref) = refs
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[0] = 0
+
+    nc = nc_ref[...]                      # (TR, K) neighbour colors
+    npr = npr_ref[...]                    # (TR, K) neighbour priorities
+    nid = nid_ref[...]                    # (TR, K) neighbour ids
+    base = base_ref[...]                  # (TR, 1) window base
+    cu = cu_ref[...]                      # (TR, 1) own (pending) color
+    pu = pu_ref[...]                      # (TR, 1) own priority
+    uid = uid_ref[...]                    # (TR, 1) own id (emitted value)
+    act = act_ref[...] != 0               # (TR, 1) active (in worklist)
+    pend = pend_ref[...] != 0             # (TR, 1) speculated last round
+
+    # --- resolve: conflict check on the resident tile ---
+    same = (nc == cu) & (cu >= 0)
+    higher = (npr > pu) | ((npr == pu) & (nid > uid))
+    lose = jnp.any(same & higher, axis=1)[:, None] & pend
+    if with_hub:
+        lose = lose | ((hl_ref[...] != 0) & pend)
+
+    # --- assign: windowed mex over the SAME tile ---
+    rel = nc - base
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (tile_rows, window), 1)
+
+    def body(k, forb):
+        r = jax.lax.dynamic_slice_in_dim(rel, k, 1, axis=1)   # (TR, 1)
+        return forb | (r == iota_w)
+
+    init = (extra_ref[...] != 0) if with_hub else jnp.zeros(
+        (tile_rows, window), bool)
+    forb = jax.lax.fori_loop(0, k_width, body, init)
+    free = jnp.logical_not(forb)
+    has = jnp.any(free, axis=1)[:, None]
+    first = jnp.argmax(free, axis=1).astype(jnp.int32)[:, None]
+
+    need = lose | (act & (cu < 0))        # rows to (re)color = survivors
+    new_c = jnp.where(need & has, base + first,
+                      jnp.where(lose, no_color, cu))
+    new_b = jnp.where(need & ~has, base + window, base)
+    newc_ref[...] = new_c
+    newb_ref[...] = new_b
+    still_ref[...] = need.astype(jnp.int32)
+
+    # --- compact: emit surviving ids at the SMEM-carried global offset ---
+    m = need[:, 0].astype(jnp.int32)[None, :]       # (1, TR)
+    csum = jnp.cumsum(m, axis=1)
+    excl = csum - m                                 # exclusive prefix
+    tile_count = csum[0, tile_rows - 1]
+    iota_p = jax.lax.broadcasted_iota(jnp.int32, (tile_rows, tile_rows), 0)
+    hit = (excl[0][None, :] == iota_p) & (m[0][None, :] != 0)     # (p, j)
+    vals = jnp.sum(jnp.where(hit, uid[:, 0][None, :], 0), axis=1)  # (p,)
+    off = carry_ref[0]
+    items_ref[pl.ds(off, tile_rows)] = vals
+    carry_ref[0] = off + tile_count
+
+    @pl.when(step == n_grid - 1)
+    def _fin():
+        count_ref[0] = carry_ref[0]
+
+
+def fused_compact_pallas(nc: jax.Array, npr: jax.Array, nbr_ids: jax.Array,
+                         base: jax.Array, cu: jax.Array, pu: jax.Array,
+                         ids: jax.Array, active: jax.Array,
+                         pending: jax.Array,
+                         extra_forb: jax.Array | None,
+                         hub_lose: jax.Array | None, window: int, *,
+                         capacity: int, n_sentinel: int,
+                         tile_rows: int = 32, no_color: int = -1,
+                         interpret: bool = False
+                         ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                    jax.Array, jax.Array]:
+    """One-launch fused step + compaction over R rows.
+
+    nc/npr/nbr_ids: (R, K) int32 neighbour color/priority/id tiles
+    base:           (R,)  int32 window base per row
+    cu/pu/ids:      (R,)  int32 own color / priority / id (``ids`` is the
+                    value emitted into the compacted worklist)
+    active:         (R,)  bool  row is in the worklist (valid, for sparse)
+    pending:        (R,)  bool  speculated-last-round flag
+    extra_forb:     (R, W) bool hub-tail forbidden bitmap, or None (the
+                    no-hub kernel variant — hub operands compiled out)
+    hub_lose:       (R,)  bool hub-tail conflict flags, or None with
+                    ``extra_forb``
+
+    Returns ``(new_colors (R,), new_base (R,), still bool(R,),
+    items int32(capacity,) padded with n_sentinel, count int32[])`` —
+    bit-identical to the jnp fused step followed by
+    ``worklist.compact_mask``/``compact_items`` over ``still``.
+    """
+    r, k = nc.shape
+    with_hub = extra_forb is not None
+    assert (hub_lose is not None) == with_hub, \
+        "extra_forb and hub_lose arrive together (the hub variant)"
+    if with_hub:
+        assert extra_forb.shape == (r, window)
+    pad = (-r) % tile_rows
+    if pad:
+        nc = jnp.pad(nc, ((0, pad), (0, 0)), constant_values=-2)
+        npr = jnp.pad(npr, ((0, pad), (0, 0)), constant_values=-1)
+        nbr_ids = jnp.pad(nbr_ids, ((0, pad), (0, 0)))
+        base = jnp.pad(base, (0, pad))
+        cu = jnp.pad(cu, (0, pad), constant_values=-2)
+        pu = jnp.pad(pu, (0, pad), constant_values=-1)
+        ids = jnp.pad(ids, (0, pad), constant_values=n_sentinel)
+        active = jnp.pad(active, (0, pad))     # pad rows inert: never emit
+        pending = jnp.pad(pending, (0, pad))
+        if with_hub:
+            extra_forb = jnp.pad(extra_forb, ((0, pad), (0, 0)))
+            hub_lose = jnp.pad(hub_lose, (0, pad))
+    rp = r + pad
+    assert capacity <= rp, (capacity, rp)
+    col = lambda x: x[:, None].astype(jnp.int32)
+    row_spec = pl.BlockSpec((tile_rows, k), lambda i: (i, 0))
+    one_spec = pl.BlockSpec((tile_rows, 1), lambda i: (i, 0))
+    win_spec = pl.BlockSpec((tile_rows, window), lambda i: (i, 0))
+    n_grid = rp // tile_rows
+    operands = [nc, npr, nbr_ids, col(base), col(cu), col(pu), col(ids),
+                col(active), col(pending)]
+    in_specs = [row_spec, row_spec, row_spec, one_spec, one_spec, one_spec,
+                one_spec, one_spec, one_spec]
+    if with_hub:
+        operands += [extra_forb.astype(jnp.int32), col(hub_lose)]
+        in_specs += [win_spec, one_spec]
+    newc, newb, still, items, count = pl.pallas_call(
+        functools.partial(_fused_compact_kernel, window=window, k_width=k,
+                          tile_rows=tile_rows, n_grid=n_grid,
+                          no_color=no_color, with_hub=with_hub),
+        grid=(n_grid,),
+        in_specs=in_specs,
+        out_specs=[
+            one_spec, one_spec, one_spec,
+            # whole items array stays VMEM-resident across the sequential
+            # grid — dynamic-offset stores need VMEM (see compact.py)
+            pl.BlockSpec((rp,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((rp,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+    cnt = count[0]
+    iota = jnp.arange(capacity, dtype=jnp.int32)
+    items = jnp.where(iota < cnt, items[:capacity], n_sentinel)
+    return newc[:r, 0], newb[:r, 0], still[:r, 0] != 0, items, cnt

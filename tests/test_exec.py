@@ -351,3 +351,38 @@ def test_get_dataset_batch_builds_and_shares():
     assert len(gs) == 3
     assert gs[0] is gs[2]                 # same cell -> same cached Graph
     assert gs[0] is not gs[1]             # override produced a new cell
+
+
+# ---------------------------------------------------------------------------
+# tile_rows: static key membership + engine-level parity (PR-6 satellites)
+# ---------------------------------------------------------------------------
+
+def test_tile_rows_rides_static_key():
+    """Two runs tuned (or pinned) to different tiles must never collide in
+    the session compile cache — tile_rows is part of every jit key."""
+    keys = {ExecutionSpec(regime="host", tile_rows=t).static_key()
+            for t in (8, 32, 128, "auto", None)}
+    assert len(keys) == 5
+
+
+def test_tile_rows_specializes_session_cache(graphs):
+    g = graphs["europe_osm_s"]
+    s = Session()
+    a = s.run(ExecutionSpec(regime="host", fused=True, tile_rows=8), g)
+    b = s.run(ExecutionSpec(regime="host", fused=True, tile_rows=128), g)
+    _same_result(a, b)                    # perf knob only: same trajectory
+
+
+@pytest.mark.parametrize("regime", ["host", "outlined"])
+def test_tile_rows_pallas_bit_identical_to_jnp(graphs, regime):
+    """The tile height is a pure performance knob: every (impl, tile_rows)
+    combination inside the fused family produces the SAME coloring."""
+    g = graphs["hollywood-2009_s"]        # hub-heavy: hub variant on
+    kw = dict(fused=True, outline=(regime == "outlined"))
+    base = color(g, impl="jnp", **kw)
+    for tr in (8, 128, "auto"):
+        got = color(g, impl="pallas", tile_rows=tr, **kw)
+        np.testing.assert_array_equal(base.colors, got.colors)
+        assert got.iterations == base.iterations
+        assert got.mode_trace == base.mode_trace
+    verify_coloring(g, base.colors)

@@ -154,3 +154,183 @@ def test_frontier_probe_property(r, k, data):
     got = np.asarray(frontier_probe_pallas(nbr, unv, interpret=True))
     want = np.asarray(nbr).any(1) & np.asarray(unv)
     np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# compact boundary conditions (PR-6 satellite): the carry machinery at its
+# edges — nothing to emit, everything emitted, and ragged tile tails
+# ---------------------------------------------------------------------------
+
+def test_compact_empty_mask():
+    items, count = compact_pallas(jnp.zeros((257,), bool), interpret=True)
+    assert int(count) == 0
+    assert (np.asarray(items) == 257).all()          # all-sentinel tail
+
+
+def test_compact_all_true_mask():
+    """count == capacity: every slot of the items array is a real index —
+    the wrapper's sentinel masking must leave none standing."""
+    n = 300                                          # not a tile multiple
+    items, count = compact_pallas(jnp.ones((n,), bool), interpret=True)
+    assert int(count) == n
+    np.testing.assert_array_equal(np.asarray(items), np.arange(n))
+
+
+@pytest.mark.parametrize("n", [1, 255, 257, 300])
+@pytest.mark.parametrize("tile", [128, 256])
+def test_compact_ragged_lengths(n, tile):
+    """Lengths not a multiple of ``tile``: the zero-padded tail tiles must
+    contribute nothing (padded indices can never appear in the output)."""
+    rng = np.random.default_rng(n * tile)
+    mask = jnp.asarray(rng.random(n) < 0.5)
+    got_i, got_c = compact_pallas(mask, tile=tile, interpret=True)
+    want_i, want_c = ref.compact_ref(mask)
+    assert int(got_c) == int(want_c)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    assert (np.asarray(got_i)[int(got_c):] == n).all()
+
+
+# ---------------------------------------------------------------------------
+# fused resolve+assign kernel vs oracle
+# ---------------------------------------------------------------------------
+
+def _fused_case(rng, r, k, w, *, hub=False, sparse=False):
+    """Random operand tuple in the shape the step impls feed the fused
+    kernels: dense style (ids = iota, all rows real) or sparse style
+    (sentinel ids on invalid rows, active = valid)."""
+    n = r
+    nc = rng.integers(-2, 40, size=(r, k)).astype(np.int32)
+    npr = rng.integers(-1, 100, size=(r, k)).astype(np.int32)
+    nid = rng.integers(0, n + 1, size=(r, k)).astype(np.int32)
+    base = (rng.integers(0, 3, size=(r,)) * w).astype(np.int32)
+    cu = rng.integers(-2, 40, size=(r,)).astype(np.int32)
+    pu = rng.integers(0, 100, size=(r,)).astype(np.int32)
+    if sparse:
+        valid = rng.random(r) < 0.7
+        ids = np.where(valid, rng.integers(0, n, size=(r,)), n)
+        active = valid
+    else:
+        ids = np.arange(r)
+        active = rng.random(r) < 0.85
+    ids = ids.astype(np.int32)
+    pending = active & (cu >= 0)
+    extra = (rng.random((r, w)) < 0.2) if hub else None
+    hl = ((rng.random(r) < 0.15) & active) if hub else None
+    out = (nc, npr, nid, base, cu, pu, ids, active, pending, extra, hl)
+    return tuple(None if a is None else jnp.asarray(a) for a in out), n
+
+
+@pytest.mark.parametrize("r,k", [(1, 1), (33, 8), (100, 24)])
+def test_fused_step_matches_ref(r, k):
+    from repro.kernels.fused_step import fused_step_pallas
+    rng = np.random.default_rng(r * 13 + k)
+    (nc, npr, nid, base, cu, pu, ids, _a, pending, _e, _h), _n = \
+        _fused_case(rng, r, k, 64, hub=True)
+    extra = jnp.asarray(rng.random((r, 64)) < 0.2)
+    got_l, got_f = fused_step_pallas(nc, npr, nid, base, cu, pu, ids,
+                                     pending, extra, 64, interpret=True)
+    want_l, want_f = ref.fused_step_ref(nc, npr, nid, base, cu, pu, ids,
+                                        pending, extra, 64)
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(want_l))
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+
+
+def _assert_fused_compact_parity(case, n, *, capacity, tile_rows=32, w=64):
+    from repro.kernels.fused_compact import fused_compact_pallas
+    got = fused_compact_pallas(*case, w, capacity=capacity, n_sentinel=n,
+                               tile_rows=tile_rows, interpret=True)
+    want = ref.fused_compact_ref(*case, w, capacity=capacity, n_sentinel=n)
+    for g, x, name in zip(got, want,
+                          ("new_c", "new_base", "still", "items", "count")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(x),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("hub", [False, True])
+@pytest.mark.parametrize("r,k", [(1, 1), (33, 8), (100, 24)])
+def test_fused_compact_matches_ref_dense(r, k, hub):
+    rng = np.random.default_rng(r * 31 + k + hub)
+    case, n = _fused_case(rng, r, k, 64, hub=hub)
+    _assert_fused_compact_parity(case, n, capacity=r)
+
+
+@pytest.mark.parametrize("hub", [False, True])
+def test_fused_compact_matches_ref_sparse(hub):
+    """Sparse-style operands: sentinel ids on invalid rows never emit, and
+    the compacted block matches ``compact_items`` semantics."""
+    rng = np.random.default_rng(77 + hub)
+    case, n = _fused_case(rng, 90, 16, 64, hub=hub, sparse=True)
+    _assert_fused_compact_parity(case, n, capacity=90)
+
+
+@pytest.mark.parametrize("tile_rows", [8, 16, 64])
+def test_fused_compact_tile_sweep(tile_rows):
+    rng = np.random.default_rng(tile_rows)
+    case, n = _fused_case(rng, 130, 12, 64, hub=True)
+    _assert_fused_compact_parity(case, n, capacity=130, tile_rows=tile_rows)
+
+
+def test_fused_compact_truncating_capacity():
+    """count may exceed capacity (compact_mask reports the full popcount
+    while the items block truncates) — the kernel must store the FIRST
+    ``capacity`` survivors in ascending order and still report the total."""
+    rng = np.random.default_rng(5)
+    case, n = _fused_case(rng, 96, 8, 64)
+    _assert_fused_compact_parity(case, n, capacity=40)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 70), st.integers(1, 12), st.booleans(), st.data())
+def test_fused_compact_property(r, k, hub, data):
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    case, n = _fused_case(rng, r, k, 64, hub=hub,
+                          sparse=data.draw(st.booleans()))
+    _assert_fused_compact_parity(case, n, capacity=r)
+
+
+# ---------------------------------------------------------------------------
+# csr-segment edge cores vs dense oracles
+# ---------------------------------------------------------------------------
+
+def _edge_case(rng, e, n, w):
+    es = rng.integers(0, n, size=(e,)).astype(np.int32)
+    ed = rng.integers(0, n, size=(e,)).astype(np.int32)
+    cu_e = rng.integers(-2, 20, size=(e,)).astype(np.int32)
+    cv_e = rng.integers(-2, 20, size=(e,)).astype(np.int32)
+    pu_e = rng.integers(0, 50, size=(e,)).astype(np.int32)
+    pv_e = rng.integers(0, 50, size=(e,)).astype(np.int32)
+    base = (rng.integers(0, 3, size=(e,)) * w).astype(np.int32)
+    return tuple(map(jnp.asarray, (es, ed, cu_e, cv_e, pu_e, pv_e, base)))
+
+
+@pytest.mark.parametrize("e,n", [(1, 1), (40, 10), (500, 64)])
+def test_edge_cores_match_ref(e, n):
+    from repro.kernels import csr_segment as kcsr
+    rng = np.random.default_rng(e + n)
+    es, ed, cu_e, cv_e, pu_e, pv_e, base = _edge_case(rng, e, n, 32)
+    got_c = kcsr.edge_conflict(es, ed, cu_e, cv_e, pu_e, pv_e, n)
+    want_c = ref.edge_conflict_ref(es, ed, cu_e, cv_e, pu_e, pv_e, n)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    got_f = kcsr.edge_forbidden(es, cv_e, base, n, 32)
+    want_f = ref.edge_forbidden_ref(es, cv_e, base, n, 32)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    # the one-pass core is exactly the pair from one shared sweep
+    fc, ff = kcsr.edge_fused(es, ed, cu_e, cv_e, pu_e, pv_e, base, n, 32)
+    np.testing.assert_array_equal(np.asarray(fc), np.asarray(want_c))
+    np.testing.assert_array_equal(np.asarray(ff), np.asarray(want_f))
+
+
+# ---------------------------------------------------------------------------
+# jpl extrema kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,k", [(1, 1), (33, 8), (200, 40)])
+def test_jpl_extrema_matches_ref(r, k):
+    from repro.kernels.jpl_prio import jpl_extrema_pallas
+    rng = np.random.default_rng(r + k)
+    npr = jnp.asarray(rng.integers(-1, 1000, size=(r, k)).astype(np.int32))
+    got_mx, got_mn = jpl_extrema_pallas(npr, interpret=True)
+    want_mx, want_mn = ref.jpl_extrema_ref(npr)
+    np.testing.assert_array_equal(np.asarray(got_mx), np.asarray(want_mx))
+    np.testing.assert_array_equal(np.asarray(got_mn), np.asarray(want_mn))

@@ -1,0 +1,99 @@
+"""Kernel-launch accounting (DESIGN.md §10): the one-launch contract.
+
+The PR-6 acceptance criterion — a fused-mode iteration executes exactly
+ONE kernel launch (assign + resolve + worklist compaction folded into a
+single pass), while the classic two-phase iteration costs three (mex,
+conflict, compact) — asserted via the trace-time ``ipgc.LAUNCH_COUNTS``
+counters through ``policy.measure_launches`` (the launch analogue of the
+``GATHER_COUNTS`` communication profile in test_algos.py).
+
+Counters bump at *trace* time, so measurement goes through
+``jax.eval_shape`` on the unjitted step impls: no device execution, no
+jit-cache interference, and the count is exact per iteration.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ipgc
+from repro.core.policy import measure_launches
+from repro.core.worklist import full_worklist
+from repro.graphs import make_graph
+
+ONE_FUSED = {"fused": 1, "mex": 0, "conflict": 0, "compact": 0}
+TWO_PHASE = {"fused": 0, "mex": 1, "conflict": 1, "compact": 1}
+
+# the three acceptance layouts + the hub-split variant for completeness
+LAYOUTS = ["pure-ell", "ell-tail", "csr-segment", "hub-split"]
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    out = {}
+    for kind in LAYOUTS:
+        # hub-heavy graph so ell-tail/hub-split actually carry hubs
+        out[kind] = make_graph("hollywood-2009_s", scale=0.02, layout=kind) \
+            if kind != "pure-ell" else \
+            make_graph("europe_osm_s", scale=0.02, layout=kind)
+    return out
+
+
+def _state(ig):
+    n = ig.n_nodes
+    return (ipgc.init_colors(n), jnp.zeros((n,), jnp.int32),
+            full_worklist(n))
+
+
+def _impls_for(kind):
+    # csr-segment runs the edge-parallel jnp core regardless of impl;
+    # ELL kinds have both the jnp and the Pallas tile path
+    return ["jnp"] if kind == "csr-segment" else ["jnp", "pallas"]
+
+
+@pytest.mark.parametrize("kind", LAYOUTS)
+def test_fused_steps_are_one_launch(graphs, kind):
+    """Dense AND sparse fused iterations: exactly one kernel launch, on
+    every layout kind, on every impl, with and without the hub path."""
+    ig = ipgc.prepare(graphs[kind])
+    colors, base, wl = _state(ig)
+    for impl in _impls_for(kind):
+        for step in (ipgc.fused_dense_step_impl, ipgc.fused_sparse_step_impl):
+            got = measure_launches(step, ig, colors, base, wl,
+                                   window=32, impl=impl, force_hub=None)
+            assert got == ONE_FUSED, (kind, impl, step.__name__, got)
+
+
+@pytest.mark.parametrize("kind", LAYOUTS)
+def test_two_phase_steps_are_three_launches(graphs, kind):
+    ig = ipgc.prepare(graphs[kind])
+    colors, base, wl = _state(ig)
+    for impl in _impls_for(kind):
+        for step in (ipgc.dense_step_impl, ipgc.sparse_step_impl):
+            got = measure_launches(step, ig, colors, base, wl,
+                                   window=32, impl=impl, force_hub=None)
+            assert got == TWO_PHASE, (kind, impl, step.__name__, got)
+
+
+def test_forced_hub_path_stays_one_launch(graphs):
+    """The hub side-channel (hub_forbidden/hub_lose bitmaps) folds into
+    the same fused launch — forcing it on must not add a pass."""
+    ig = ipgc.prepare(graphs["ell-tail"])
+    colors, base, wl = _state(ig)
+    for impl in ("jnp", "pallas"):
+        got = measure_launches(ipgc.fused_dense_step_impl, ig, colors, base,
+                               wl, window=32, impl=impl, force_hub=True)
+        assert got == ONE_FUSED, (impl, got)
+
+
+def test_tile_rows_does_not_change_launch_count(graphs):
+    ig = ipgc.prepare(graphs["pure-ell"])
+    colors, base, wl = _state(ig)
+    for tr in (8, 32, 128):
+        got = measure_launches(ipgc.fused_dense_step_impl, ig, colors, base,
+                               wl, window=32, impl="pallas", tile_rows=tr)
+        assert got == ONE_FUSED, (tr, got)
+
+
+def test_reset_launch_counts():
+    ipgc.LAUNCH_COUNTS["fused"] += 7
+    ipgc.reset_launch_counts()
+    assert all(v == 0 for v in ipgc.LAUNCH_COUNTS.values())

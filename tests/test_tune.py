@@ -1,0 +1,121 @@
+"""Persistent tile autotuner (kernels/tune.py, DESIGN.md §10): sweep →
+disk cache → in-process memo lifecycle, corrupt-cache recovery, and the
+``resolve_tile_rows`` policy the Session applies per run."""
+import json
+import os
+
+import pytest
+
+from repro.kernels import tune
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Point the tuner at a fresh cache file and a clean memo."""
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv(tune.CACHE_ENV, str(path))
+    tune.clear_memo()
+    yield path
+    tune.clear_memo()
+
+
+def test_cache_path_env_override(tmp_cache):
+    assert tune.cache_path() == str(tmp_cache)
+
+
+def test_tune_key_shape():
+    assert tune.tune_key("cpu", "ell-tail") == "cpu/ell-tail/int32"
+    assert tune.tune_key("tpu", "pure-ell", "int16") == "tpu/pure-ell/int16"
+
+
+def test_sweep_non_ell_kind_is_none():
+    cfg = tune.sweep("csr-segment")
+    assert cfg.tile_rows is None and cfg.micros == {}
+
+
+def test_sweep_times_every_candidate(tmp_cache):
+    cfg = tune.sweep("pure-ell", candidates=(8, 32))
+    assert set(cfg.micros) == {"8", "32"}
+    assert all(v > 0 for v in cfg.micros.values())
+    assert cfg.tile_rows in (8, 32)
+    # the winner is the measured minimum
+    assert str(cfg.tile_rows) == min(cfg.micros, key=cfg.micros.get)
+
+
+def test_get_tile_config_sweeps_once_and_persists(tmp_cache, monkeypatch):
+    calls = []
+    real_sweep = tune.sweep
+    monkeypatch.setattr(tune, "sweep",
+                        lambda kind, **kw: calls.append(kind) or
+                        real_sweep(kind, candidates=(8, 32)))
+    cfg1 = tune.get_tile_config("ell-tail")
+    cfg2 = tune.get_tile_config("ell-tail")     # memo hit
+    assert calls == ["ell-tail"]
+    assert cfg2 is cfg1
+    # persisted in the documented schema
+    with open(tmp_cache) as f:
+        data = json.load(f)
+    assert data["version"] == tune.CACHE_VERSION
+    import jax
+    key = tune.tune_key(jax.default_backend(), "ell-tail")
+    assert data["entries"][key]["tile_rows"] == cfg1.tile_rows
+    # a fresh process (cleared memo) reads the disk entry, no re-sweep
+    tune.clear_memo()
+    cfg3 = tune.get_tile_config("ell-tail")
+    assert calls == ["ell-tail"]
+    assert cfg3.tile_rows == cfg1.tile_rows
+    assert cfg3.micros == {k: pytest.approx(v)
+                           for k, v in cfg1.micros.items()}
+
+
+def test_corrupt_cache_is_discarded_and_reswept(tmp_cache, monkeypatch):
+    tmp_cache.write_text("{not json")
+    monkeypatch.setattr(
+        tune, "sweep", lambda kind, **kw: tune.TileConfig(8, {"8": 1.0}))
+    assert tune.get_tile_config("pure-ell").tile_rows == 8
+    with open(tmp_cache) as f:
+        assert json.load(f)["version"] == tune.CACHE_VERSION
+
+
+def test_version_mismatch_is_discarded(tmp_cache, monkeypatch):
+    import jax
+    key = tune.tune_key(jax.default_backend(), "pure-ell")
+    tmp_cache.write_text(json.dumps(
+        {"version": 999, "entries": {key: {"tile_rows": 4}}}))
+    monkeypatch.setattr(
+        tune, "sweep", lambda kind, **kw: tune.TileConfig(16, {"16": 1.0}))
+    assert tune.get_tile_config("pure-ell").tile_rows == 16
+
+
+def test_csr_segment_records_none(tmp_cache):
+    cfg = tune.get_tile_config("csr-segment")
+    assert cfg.tile_rows is None
+    tune.clear_memo()                     # round-trips through the JSON null
+    assert tune.get_tile_config("csr-segment").tile_rows is None
+
+
+# ---------------------------------------------------------------------------
+# resolve_tile_rows: the Session-facing policy
+# ---------------------------------------------------------------------------
+
+def test_resolve_explicit_int_always_wins(tmp_cache):
+    for kind in ("pure-ell", "csr-segment"):
+        for impl in ("jnp", "pallas"):
+            assert tune.resolve_tile_rows(64, kind, impl) == 64
+
+
+def test_resolve_auto_jnp_is_none(tmp_cache):
+    """The jnp path has no tile grid: auto must NOT fragment its jit
+    caches with tuned values."""
+    assert tune.resolve_tile_rows("auto", "ell-tail", "jnp") is None
+    assert tune.resolve_tile_rows(None, "pure-ell", "jnp") is None
+
+
+def test_resolve_auto_csr_is_none(tmp_cache):
+    assert tune.resolve_tile_rows("auto", "csr-segment", "pallas") is None
+
+
+def test_resolve_auto_pallas_consults_tuner(tmp_cache, monkeypatch):
+    monkeypatch.setattr(
+        tune, "sweep", lambda kind, **kw: tune.TileConfig(128, {"128": 1.0}))
+    assert tune.resolve_tile_rows("auto", "ell-tail", "pallas") == 128
