@@ -49,6 +49,16 @@ number).
 
   PYTHONPATH=src python -m benchmarks.bench_engine_modes --kernels
 
+``--stream`` runs the continuous-batching leg (DESIGN.md §11): a
+heavy-tailed request mix served by ``Session.stream`` — bounded queue,
+resident lanes refilled at chunk boundaries — against one static
+``run_batch`` barrier on the same warm session, and writes
+``BENCH_stream.json`` with graphs/sec both ways, the stream-vs-static
+ratio (acceptance: >= 2x) and per-request latency percentiles. Every
+streamed result is verified bit-identical to a solo ``Session.run``.
+
+  PYTHONPATH=src python -m benchmarks.bench_engine_modes --stream
+
 ``--smoke`` is the CI fast path: tiny scale, one run, both engine families
 (combine with --algos for the algos matrix leg, or --layouts for the
 pipeline sweep).
@@ -400,6 +410,126 @@ def bench_serve(scale: float = 0.02, batch_sizes: tuple[int, ...] = (1, 8, 64),
     return report
 
 
+# The serving traffic mix: names repeat to weight the draw — road and
+# hub graphs (4-7 Pipe iterations at these sizes) are the bulk of the
+# traffic, web (~10) is uncommon and rgg (~16-20) rare, so a static
+# barrier batch mostly rides lanes that finished long ago.
+STREAM_MIX = ("europe_osm_s", "circuit5M_s", "europe_osm_s", "circuit5M_s",
+              "europe_osm_s", "circuit5M_s", "indochina-2004_s",
+              "rgg_n_2_24_s0_s")
+
+
+def bench_stream(count: int = 20, max_nodes: int = 4_000, lanes: int = 4,
+                 seed: int = 7, quiet: bool = False,
+                 out_path: str | None = "BENCH_stream.json") -> dict:
+    """Continuous-batching leg (DESIGN.md §11) -> ``BENCH_stream.json``.
+
+    A heavy-tailed request mix (bounded Pareto over graph sizes — many
+    small graphs, a few huge ones) is colored two ways on one warm
+    session:
+
+      static   ``run_batch`` — every shape-class rung is one barrier
+               batch padded to a power-of-two lane count, iterating until
+               its slowest member drains
+      stream   ``Session.stream`` — a fixed set of resident lanes per
+               rung, drained lanes refilled from the queue at chunk
+               boundaries, so small requests stop paying for the tail
+
+    The mix pins ``layout="ell-tail"`` (the stream contract is
+    ELL-family only; the auto planner would hand some draws
+    csr-segment). Acceptance is ``stream graphs/sec >= 2x static``, and
+    it only counts because every streamed result is verified
+    bit-identical (colors, iterations, mode trace) to a solo
+    ``Session.run`` of the same request. Latency percentiles come from
+    the tickets' enqueue/admit/drain stamps.
+    """
+    import jax
+
+    from repro.core.policy import Timer
+    from repro.exec import ExecutionSpec, Session
+    from repro.graphs import get_dataset_batch
+    from repro.serve import StreamConfig
+
+    # min_nodes sits just above the capacity ladder's second rung
+    # (max_nodes/2 under the default bucket_ratio=2), so the whole mix
+    # shares ONE shape-class rung with its slowest members — the
+    # barrier-vs-refill comparison, not a bucketing comparison.
+    requests = get_dataset_batch(
+        heavy_tail={"count": count, "names": STREAM_MIX,
+                    "min_nodes": max_nodes // 2 + 100,
+                    "max_nodes": max_nodes, "alpha": 1.5},
+        seed=seed, layout="ell-tail")
+    spec = ExecutionSpec(regime="host", window=128)
+    sess = Session()
+
+    solo = [sess.run(spec, g) for g in requests]   # reference + warm cache
+
+    sess.run_batch(spec, requests)                 # compile pass
+    with Timer() as t_static:
+        static_results = sess.run_batch(spec, requests)
+
+    # anchor the stream's capacity ladder at the workload bound so its
+    # rungs match run_batch's (which anchors at the batch max) — a
+    # 1<<20 ladder would pad the big rung's lanes far past static's
+    cfg = StreamConfig(lanes=lanes, chunk="auto", max_queue=count,
+                       max_nodes=max_nodes)
+    sess.stream(spec, cfg).run(requests)           # compile pass
+    stream = sess.stream(spec, cfg)
+    with Timer() as t_stream:
+        tickets = [stream.submit(g) for g in requests]
+        stream.drain()
+
+    for g, tk, ref in zip(requests, tickets, solo):
+        r = tk.result
+        verify_coloring(g, r.colors, context=f"stream seq {tk.seq}")
+        np.testing.assert_array_equal(r.colors, ref.colors)
+        assert r.iterations == ref.iterations, (tk.seq, r, ref)
+        assert r.mode_trace == ref.mode_trace, (tk.seq, r, ref)
+    for rb, ref in zip(static_results, solo):
+        np.testing.assert_array_equal(rb.colors, ref.colors)
+
+    ratio = t_static.seconds / t_stream.seconds
+    totals = sorted(tk.total_seconds for tk in tickets)
+    queues = [tk.queue_seconds for tk in tickets]
+
+    def pct(p):
+        return round(float(np.percentile(totals, p)), 4)
+
+    report = {
+        "backend": jax.default_backend(),
+        "knobs": {"count": count, "names": list(STREAM_MIX),
+                  "min_nodes": max_nodes // 2 + 100,
+                  "max_nodes": max_nodes, "lanes": lanes, "seed": seed,
+                  "alpha": 1.5, "window": 128, "layout": "ell-tail"},
+        "sizes": sorted(g.n_nodes for g in requests),
+        "static_seconds": round(t_static.seconds, 4),
+        "stream_seconds": round(t_stream.seconds, 4),
+        "static_gps": round(count / t_static.seconds, 2),
+        "stream_gps": round(count / t_stream.seconds, 2),
+        "stream_vs_static": round(ratio, 2),
+        "acceptance_ge_2x": ratio >= 2.0,
+        "latency": {"p50_s": pct(50), "p90_s": pct(90), "p99_s": pct(99),
+                    "max_s": round(totals[-1], 4),
+                    "mean_queue_s": round(float(np.mean(queues)), 4)},
+        "chunk_dispatches": sum(tk.chunks for tk in tickets),
+        "stream_stats": stream.stats(),
+        "verified_bit_identical": len(tickets),
+    }
+    if not quiet:
+        print(csv_row("stream", f"N={count}",
+                      f"static {report['static_gps']}/s",
+                      f"stream {report['stream_gps']}/s",
+                      f"{report['stream_vs_static']}x",
+                      f"p50 {report['latency']['p50_s']}s",
+                      f"p99 {report['latency']['p99_s']}s"))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        if not quiet:
+            print(f"# wrote {out_path}")
+    return report
+
+
 def bench_kernels(scale: float = 0.02, rows: int = 2048, runs: int = 5,
                   quiet: bool = False,
                   out_path: str | None = "BENCH_kernels.json") -> dict:
@@ -608,6 +738,12 @@ def main() -> None:
                     help="one-launch fused+compact kernel leg "
                          "-> BENCH_kernels.json")
     ap.add_argument("--kernels-out", default="BENCH_kernels.json")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous-batching stream-vs-static leg "
+                         "-> BENCH_stream.json")
+    ap.add_argument("--stream-count", type=int, default=20,
+                    help="heavy-tail request count for --stream")
+    ap.add_argument("--stream-out", default="BENCH_stream.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI fast path: tiny scale, 1 run, no JSON for the "
                          "host bench, dist bench on 1,2,8 shards (or the "
@@ -615,6 +751,14 @@ def main() -> None:
     args = ap.parse_args()
     shards = tuple(int(s) for s in args.shards.split(","))
 
+    if args.stream:
+        st_count, st_nodes = ((8, 3_000) if args.smoke
+                              else (args.stream_count, 4_000))
+        print(csv_row("leg", "N", "static", "stream", "ratio", "p50",
+                      "p99"))
+        bench_stream(count=st_count, max_nodes=st_nodes,
+                     out_path=args.stream_out)
+        return
     if args.kernels:
         k_scale, k_rows, k_runs = ((0.01, 2048, 3) if args.smoke
                                    else (args.scale, 2048, args.runs))

@@ -139,6 +139,79 @@ class AutoTuned:
             self.observe(False, int(max(mean_count, 1)), 0, per_iter)
 
 
+# ---------------------------------------------------------------------------
+# chunk-size policies — the REFILL cadence of the streaming service
+# ---------------------------------------------------------------------------
+#
+# The hybrid H policy above decides dense-vs-sparse per iteration; a chunk
+# policy decides how many iterations a streamed lane group runs per device
+# dispatch before the scheduler may harvest drained lanes and refill them
+# from the queue (serve/stream.py, DESIGN.md §11). Chunk size is a pure
+# performance knob: per-request results are bit-identical for any cadence
+# (chunk boundaries only partition the while_loop trips of independent
+# lanes), so these policies trade dispatch overhead (large chunks) against
+# lane idle time between a drain and its refill (small chunks).
+
+
+@dataclasses.dataclass
+class FixedChunk:
+    """Constant refill cadence: every dispatch runs ``iters`` iterations."""
+
+    iters: int = 8
+
+    def __call__(self) -> int:
+        return max(int(self.iters), 1)
+
+    def observe_round(self, drained: int, resident: int, trips: int) -> None:
+        pass
+
+
+@dataclasses.dataclass
+class AdaptiveChunk:
+    """Drain-rate-steered refill cadence.
+
+    A chunk that drained nobody paid a scheduling round for nothing —
+    double the cadence (up to ``max_iters``); a chunk that drained half
+    or more of its resident lanes left them idle for up to ``iters``
+    trips each — halve it (down to ``min_iters``). Deterministic given
+    the observed round history, so a replayed request stream makes the
+    same cadence decisions.
+    """
+
+    min_iters: int = 2
+    max_iters: int = 64
+    iters: int = 8
+
+    def __call__(self) -> int:
+        return max(int(self.iters), 1)
+
+    def observe_round(self, drained: int, resident: int, trips: int) -> None:
+        if resident <= 0:
+            return
+        if drained == 0:
+            self.iters = min(self.iters * 2, self.max_iters)
+        elif 2 * drained >= resident:
+            self.iters = max(self.iters // 2, self.min_iters)
+
+
+def make_chunk_policy(chunk) -> "FixedChunk | AdaptiveChunk":
+    """Resolve a ``StreamConfig.chunk`` knob: an int pins a fixed cadence,
+    ``"auto"`` adapts from drain rates, a policy object passes through."""
+    if isinstance(chunk, bool):
+        raise TypeError(f"chunk must be an int, 'auto' or a policy, got {chunk!r}")
+    if isinstance(chunk, int):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        return FixedChunk(chunk)
+    if chunk == "auto":
+        return AdaptiveChunk()
+    if callable(chunk) and hasattr(chunk, "observe_round"):
+        return chunk
+    raise TypeError(
+        f"chunk must be an int, 'auto' or a chunk policy object with "
+        f"__call__ + observe_round, got {chunk!r}")
+
+
 def make_policy(mode: str, h: float = 0.6) -> Policy:
     # "dist-hybrid" etc. select the sharded engine at the dispatch layer;
     # the switching policy itself is the same — the distributed driver

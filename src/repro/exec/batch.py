@@ -77,7 +77,37 @@ def _round8(x: int) -> int:
     return max(-(-x // 8) * 8, 8)
 
 
-def _lane_colors(real_n: int, n_pad: int) -> jax.Array:
+def shape_class_for(igs, n_cap: int, window: int, kind: str) -> ShapeClass:
+    """The ShapeClass covering every member of one bucket rung: ELL width /
+    tail length / hub count are the member maxima rounded up (x8 for the
+    ELL width, powers of two for tail and hub slots) so near-miss batches
+    reuse one compiled program; ``ipgc.pad_prepared`` guarantees the
+    padding is inert."""
+    return ShapeClass(
+        n_pad=n_cap,
+        k_pad=_round8(max(ig.ell_width for ig in igs)),
+        t_pad=_pow2(max(ig.tail_src.shape[0] for ig in igs), floor=8),
+        nh_pad=(0 if all(ig.n_hub == 0 for ig in igs)
+                else _pow2(max(ig.n_hub for ig in igs))),
+        window=window, kind=kind)
+
+
+def grow_shape_class(sc: ShapeClass, ig) -> ShapeClass:
+    """Sticky growth for streamed lane groups (serve/stream.py): widen the
+    pads to also cover ``ig``, never shrink — resident lanes' carried
+    state (colors/aux/worklist) depends only on ``n_pad``, so growth
+    re-pads the lane-stacked *graph* arrays without touching state."""
+    assert ig.n_nodes <= sc.n_pad, "graph exceeds the group's node rung"
+    return ShapeClass(
+        n_pad=sc.n_pad,
+        k_pad=max(sc.k_pad, _round8(ig.ell_width)),
+        t_pad=max(sc.t_pad, _pow2(ig.tail_src.shape[0], floor=8)),
+        nh_pad=(sc.nh_pad if ig.n_hub == 0
+                else max(sc.nh_pad, _pow2(ig.n_hub))),
+        window=sc.window, kind=sc.kind)
+
+
+def lane_colors(real_n: int, n_pad: int) -> jax.Array:
     """Per-lane initial colors: real slots uncolored, pad slots (and the
     sentinel) PAD_COLOR — so old sentinel gathers stay PAD and pad nodes
     can never look active or conflicting."""
@@ -85,7 +115,7 @@ def _lane_colors(real_n: int, n_pad: int) -> jax.Array:
     return jnp.where(ar < real_n, NO_COLOR, PAD_COLOR).astype(jnp.int32)
 
 
-def _empty_lane(sc: ShapeClass) -> ipgc.IPGCGraph:
+def empty_lane(sc: ShapeClass) -> ipgc.IPGCGraph:
     """An all-padding member of the shape class (fills power-of-two lane
     slots; its count is 0, so every step is a no-op on it)."""
     return ipgc.IPGCGraph(
@@ -106,17 +136,40 @@ def _empty_lane(sc: ShapeClass) -> ipgc.IPGCGraph:
 # the batched device program
 # ---------------------------------------------------------------------------
 
-def _batched_chunk_impl(ig, colors, aux, wl, thresh, max_iter, *,
+def _freeze_inert(alive, new, old):
+    """Per-lane select: lanes that are not alive keep their old state.
+
+    For a *drained* lane this is a no-op (an all-False active mask makes
+    the step itself inert) — it exists so a lane that hit its per-lane
+    ``max_iter`` cap stops evolving, exactly like the solo host loop
+    stops dispatching at ``max_iter``. The chunked streaming driver
+    relies on this: lanes admitted in different rounds carry different
+    iteration counts through one shared program.
+    """
+    def sel(n, o):
+        mask = alive.reshape(alive.shape + (1,) * (n.ndim - 1))
+        return jnp.where(mask, n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
+def _batched_chunk_impl(ig, colors, aux, wl, thresh, iters0, nd0, ns0,
+                        max_iter, chunk, *,
                         algo, window: int, impl: str, fused: bool,
                         force_hub: bool, tile_rows: "int | None" = None):
     """ONE device program for a whole bucket: the dense-form step vmapped
-    over lanes inside a lax.while_loop that runs until every lane drains.
+    over lanes inside a lax.while_loop that runs until every lane drains
+    (or ``chunk`` trips elapse — the streaming refill boundary; run_batch
+    passes ``chunk = max_iter`` so the loop is the full barrier batch).
 
     Per-lane bookkeeping mirrors the outlined chunk's D/S counters: a
-    lane's iteration counts only while its count is > 0, and the D/S
-    split is decided from the pre-step count against the lane's policy
-    threshold — the same comparison the host loop makes, so the
-    reconstructed trace is exact for monotone policies.
+    lane's iteration counts only while its count is > 0 and below the
+    per-lane ``max_iter`` cap, and the D/S split is decided from the
+    pre-step count against the lane's policy threshold — the same
+    comparison the host loop makes, so the reconstructed trace is exact
+    for monotone policies. ``iters0``/``nd0``/``ns0`` carry per-lane
+    counters across chunk dispatches: streamed lanes admitted in
+    different rounds resume mid-flight through the same compiled program.
     """
     if algo is None:
         dense_fn = (ipgc.fused_dense_step_impl if fused
@@ -128,23 +181,24 @@ def _batched_chunk_impl(ig, colors, aux, wl, thresh, max_iter, *,
         tile_rows=tile_rows))
 
     def cond(state):
-        _, _, wl, trips, _, _, _ = state
-        return (wl.count > 0).any() & (trips < max_iter)
+        _, _, wl, trip, iters, _, _ = state
+        alive = (wl.count > 0) & (iters < max_iter)
+        return alive.any() & (trip < chunk)
 
     def body(state):
-        colors, aux, wl, trips, iters, nd, ns = state
-        alive = wl.count > 0
+        colors, aux, wl, trip, iters, nd, ns = state
+        alive = (wl.count > 0) & (iters < max_iter)
         dense = alive & (wl.count > thresh)      # pre-step count, per lane
-        colors, aux, wl = step(ig, colors, aux, wl)
-        return (colors, aux, wl, trips + 1,
+        stepped = step(ig, colors, aux, wl)
+        colors, aux, wl = _freeze_inert(alive, stepped, (colors, aux, wl))
+        return (colors, aux, wl, trip + 1,
                 iters + alive.astype(jnp.int32),
                 nd + dense.astype(jnp.int32),
                 ns + (alive & ~dense).astype(jnp.int32))
 
-    z = jnp.zeros((colors.shape[0],), jnp.int32)
     return jax.lax.while_loop(
         cond, body,
-        (colors, aux, wl, jnp.zeros((), jnp.int32), z, z, z))
+        (colors, aux, wl, jnp.zeros((), jnp.int32), iters0, nd0, ns0))
 
 
 _batched_chunk = jax.jit(
@@ -157,32 +211,14 @@ _batched_chunk = jax.jit(
 # driver
 # ---------------------------------------------------------------------------
 
-def _validate(spec: ExecutionSpec, alg, graphs) -> None:
-    if spec.regime != "host":
-        raise ValueError(
-            f"run_batch executes host-regime semantics (fused default, "
-            f"window/policy resolution) and would silently ignore the "
-            f"{spec.regime!r} regime's knobs; pass a spec with "
-            "regime='host'")
-    if not alg.batch_safe:
-        raise ValueError(
-            f"algorithm {alg.name!r} is not batch-safe: "
-            f"{alg.batch_unsafe_reason or 'no declared batch contract'}")
-    if spec.impl != "jnp":
-        raise ValueError(
-            "run_batch requires impl='jnp' (the Pallas kernels are not "
-            "audited under vmap)")
-    mode = spec.mode
-    if mode.startswith("dist-") or mode == "hybrid-auto":
-        raise ValueError(
-            f"run_batch cannot replay mode {spec.mode!r} per lane: the "
-            "batched Pipe needs a monotone per-lane count threshold "
-            "(hybrid / topology / data)")
+def _validate(spec: ExecutionSpec, graphs):
+    alg = spec.validate_batchable()
     for g in graphs:
         if not isinstance(g, Graph):
             raise TypeError(
                 "run_batch needs host Graph objects (it pads and stacks "
                 f"prepared arrays); got {type(g).__name__}")
+    return alg
 
 
 def run_batch(session, spec: ExecutionSpec, graphs,
@@ -194,10 +230,15 @@ def run_batch(session, spec: ExecutionSpec, graphs,
     a mixed-reorder batch reports colors in original node ids.
     """
     graphs = list(graphs)
-    alg = spec.resolved_algo()
-    _validate(spec, alg, graphs)
+    alg = _validate(spec, graphs)
     if not graphs:
         return []
+    with session.pin():
+        return _run_batch_pinned(session, spec, alg, graphs,
+                                 map_to_original=map_to_original)
+
+
+def _run_batch_pinned(session, spec, alg, graphs, *, map_to_original):
     from repro.algos.ipgc_algo import IPGC
     algo_static = None if alg == IPGC() else alg
     fused = alg.resolve_fused(spec.fused, default=False)  # host-loop default
@@ -227,13 +268,7 @@ def run_batch(session, spec: ExecutionSpec, graphs,
     for (n_cap, window, kind), idxs in sorted(groups.items(),
                                               key=lambda kv: kv[1][0]):
         igs = [prepared[i][1] for i in idxs]
-        sc = ShapeClass(
-            n_pad=n_cap,
-            k_pad=_round8(max(ig.ell_width for ig in igs)),
-            t_pad=_pow2(max(ig.tail_src.shape[0] for ig in igs), floor=8),
-            nh_pad=(0 if all(ig.n_hub == 0 for ig in igs)
-                    else _pow2(max(ig.n_hub for ig in igs))),
-            window=window, kind=kind)
+        sc = shape_class_for(igs, n_cap, window, kind)
         b_pad = _pow2(len(idxs))
 
         # ---- lane-stacked graph (cached: identical batches re-dispatch)
@@ -251,7 +286,7 @@ def run_batch(session, spec: ExecutionSpec, graphs,
                     pad_key,
                     lambda ig=ig, g=g: (g, ipgc.pad_prepared(
                         ig, sc.n_pad, sc.k_pad, sc.t_pad, sc.nh_pad)))[1])
-            lanes.extend(_empty_lane(sc) for _ in range(b_pad - len(idxs)))
+            lanes.extend(empty_lane(sc) for _ in range(b_pad - len(idxs)))
             stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
             aux0 = jax.tree.map(lambda *xs: jnp.stack(xs),
                                 *[alg.init_state(lane)[1] for lane in lanes])
@@ -262,7 +297,7 @@ def run_batch(session, spec: ExecutionSpec, graphs,
         # ---- per-lane state + policy thresholds
         real_ns = [prepared[i][1].n_nodes for i in idxs]
         real_ns += [0] * (b_pad - len(idxs))
-        colors0 = jnp.stack([_lane_colors(rn, sc.n_pad) for rn in real_ns])
+        colors0 = jnp.stack([lane_colors(rn, sc.n_pad) for rn in real_ns])
         wl0 = stacked_worklist(real_ns, sc.n_pad)
         thresh = jnp.asarray(
             [device_threshold(pol, rn) if rn else 0 for rn in real_ns],
@@ -273,9 +308,11 @@ def run_batch(session, spec: ExecutionSpec, graphs,
         session.cached(("batch-program", sc, b_pad, algo_static, fused,
                         force_hub, spec.impl, tile_rows), lambda: True)
 
+        z = jnp.zeros((b_pad,), jnp.int32)
         with Timer() as t:
-            colors, aux, wl, trips, iters, nd, ns = _batched_chunk(
-                stacked, colors0, aux0, wl0, thresh,
+            colors, aux, wl, _, iters, nd, ns = _batched_chunk(
+                stacked, colors0, aux0, wl0, thresh, z, z, z,
+                jnp.asarray(spec.max_iter, jnp.int32),
                 jnp.asarray(spec.max_iter, jnp.int32),
                 algo=algo_static, window=window, impl=spec.impl,
                 fused=fused, force_hub=force_hub, tile_rows=tile_rows)

@@ -35,6 +35,7 @@ works: it simply becomes the backing store of a Session.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -61,6 +62,7 @@ class CacheStats:
 
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -69,11 +71,13 @@ class CacheStats:
 
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
                 "hit_rate": round(self.hit_rate, 4)}
 
     def reset(self) -> None:
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
 
 def _graph_key(g) -> tuple:
@@ -106,6 +110,44 @@ class Session:
         self.cache: dict = {} if cache is None else cache
         self.max_entries = max_entries
         self.stats = CacheStats()
+        self._pin_depth = 0
+        self._pinned: set = set()
+
+    @contextlib.contextmanager
+    def pin(self):
+        """Exempt every entry touched inside the block from FIFO eviction.
+
+        A multi-entry run (``run_batch``, a streaming round) touches
+        several cache entries that must stay live TOGETHER for its whole
+        duration — on a bounded session, a long run over many distinct
+        shape classes could otherwise evict its own earlier entries
+        mid-flight (the live stacked batch, the pad entries its lanes
+        share). While pinned the bound may be exceeded; the outermost
+        exit re-applies it against the then-oldest unpinned entries.
+        Nests: inner pins extend the outermost scope.
+        """
+        self._pin_depth += 1
+        try:
+            yield self
+        finally:
+            self._pin_depth -= 1
+            if self._pin_depth == 0:
+                self._pinned.clear()
+                self._evict()
+
+    def _evict(self) -> None:
+        if self.max_entries is None:
+            return
+        while len(self.cache) > self.max_entries:
+            # FIFO eviction: dicts preserve insertion order and the
+            # entry just added is last, so it never evicts itself;
+            # pinned keys (a live run's own entries) are skipped
+            victim = next((k for k in self.cache if k not in self._pinned),
+                          None)
+            if victim is None:
+                return
+            self.cache.pop(victim)
+            self.stats.evictions += 1
 
     def cached(self, key: tuple, build):
         """Single lookup point — every compiled/prepared artifact in every
@@ -115,13 +157,12 @@ class Session:
         except KeyError:
             self.stats.misses += 1
             entry = self.cache[key] = build()
-            if self.max_entries is not None:
-                while len(self.cache) > self.max_entries:
-                    # FIFO eviction: dicts preserve insertion order and
-                    # the entry just added is last, so it never evicts
-                    # itself
-                    self.cache.pop(next(iter(self.cache)))
+            if self._pin_depth > 0:
+                self._pinned.add(key)
+            self._evict()
             return entry
+        if self._pin_depth > 0:
+            self._pinned.add(key)
         self.stats.hits += 1
         return entry
 
@@ -154,6 +195,17 @@ class Session:
         from repro.exec import batch as _batch
         return _batch.run_batch(self, spec, graphs,
                                 map_to_original=map_to_original)
+
+    def stream(self, spec: ExecutionSpec, config=None):
+        """A continuous-batching service over this session's cache.
+
+        Returns a ``StreamSession`` (serve/stream.py): submit requests as
+        they arrive, lanes that drain at a chunk boundary are refilled
+        from the queue, results are bit-identical to solo ``run`` per
+        request (DESIGN.md §11).
+        """
+        from repro.serve.stream import StreamSession
+        return StreamSession(self, spec, config)
 
     # -- shared preparation --------------------------------------------------
 

@@ -72,6 +72,39 @@ class ExecutionSpec:
         from repro.algos import get_algorithm
         return get_algorithm(self.algo)
 
+    def validate_batchable(self):
+        """Check this spec can run lane-batched — the shared admission
+        contract of ``Session.run_batch`` and the streaming service
+        (exec/batch.py, serve/stream.py; DESIGN.md §§9+11). Returns the
+        resolved Algorithm so callers don't resolve twice.
+
+        Lane batching replays host-regime semantics per lane with the
+        D/S trace reconstructed from per-lane counts against a monotone
+        policy threshold, via vmapped jnp step impls — every knob that
+        breaks one of those legs fails loudly here.
+        """
+        alg = self.resolved_algo()
+        if self.regime != "host":
+            raise ValueError(
+                f"lane-batched execution replays host-regime semantics "
+                f"(fused default, window/policy resolution) and would "
+                f"silently ignore the {self.regime!r} regime's knobs; "
+                "pass a spec with regime='host'")
+        if not alg.batch_safe:
+            raise ValueError(
+                f"algorithm {alg.name!r} is not batch-safe: "
+                f"{alg.batch_unsafe_reason or 'no declared batch contract'}")
+        if self.impl != "jnp":
+            raise ValueError(
+                "lane-batched execution requires impl='jnp' (the Pallas "
+                "kernels are not audited under vmap)")
+        if self.mode.startswith("dist-") or self.mode == "hybrid-auto":
+            raise ValueError(
+                f"lane-batched execution cannot replay mode {self.mode!r} "
+                "per lane: the batched Pipe needs a monotone per-lane "
+                "count threshold (hybrid / topology / data)")
+        return alg
+
     def static_key(self) -> tuple:
         """The spec half of the unified Session cache key (DESIGN.md §9).
 

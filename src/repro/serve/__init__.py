@@ -1,0 +1,12 @@
+"""Continuous-batching coloring service (DESIGN.md §11).
+
+``StreamSession`` turns ``Session.run_batch``'s barrier semantics —
+every lane launches together and waits for the slowest — into a
+continuous-batching loop: requests queue, drain at chunk boundaries,
+and freed lanes refill from the queue, with per-request results
+bit-identical to a solo ``Session.run``.
+"""
+from repro.serve.clock import ManualClock
+from repro.serve.stream import StreamConfig, StreamSession, Ticket
+
+__all__ = ["ManualClock", "StreamConfig", "StreamSession", "Ticket"]

@@ -1,0 +1,543 @@
+"""Continuous-batching coloring service — the streaming layer over
+``Session``'s unified cache (DESIGN.md §11).
+
+``Session.run_batch`` (exec/batch.py) is a *barrier* batch: all lanes
+launch together and the vmapped ``lax.while_loop`` spins until the
+slowest lane drains, so one hollywood-sized request stalls 63 small
+ones. A ``StreamSession`` keeps the same per-lane step semantics but
+breaks the barrier into *chunks*:
+
+  submit(g) --> bounded FIFO queue --> admit into a free lane -->
+  chunked dispatch (``_batched_chunk`` with a finite trip budget) -->
+  harvest drained lanes --> refill from the queue --> repeat
+
+Scheduling contract:
+
+  * **Admission** happens only at chunk boundaries (``pump``). The
+    queue is scanned in FIFO order; a request whose lane group is full
+    does not block later requests whose group has a free lane, and
+    within a group admission order is FIFO — no starvation, because
+    lanes keep draining and the scan always starts from the oldest.
+  * **Lane groups** are keyed (node rung, resolved window, layout
+    kind) — the same ``pick_bucket`` ladder as ``run_batch``, anchored
+    at ``StreamConfig.max_nodes``. A group's ``ShapeClass`` grows
+    *sticky-monotone* (``grow_shape_class``): resident lanes' carried
+    state depends only on ``n_pad``, so growth re-pads the lane-stacked
+    graph arrays without touching colors/aux/worklists.
+  * **Backpressure**: the queue is bounded (``max_queue``); overload
+    resolves via the shed policy — ``"reject-new"`` bounces the
+    incoming request, ``"shed-oldest"`` bounces the oldest queued one,
+    or a callable picks the victim. A bounced ticket comes back
+    ``status="rejected"`` with a human-readable ``reason`` — the
+    service never blocks and never raises for load.
+  * **Latency accounting**: every ticket is stamped at enqueue, admit
+    and drain through one injectable ``clock`` (serve/clock.py), so
+    ``queue_seconds + service_seconds == total_seconds`` exactly.
+
+Bit-identity guarantee (tests/test_stream.py): a streamed result equals
+the solo ``Session.run`` of the same request under the host regime —
+colors, color count, iteration count, and reconstructed D/S trace —
+for ANY arrival order, lane count, or chunk cadence. Chunk boundaries
+only partition the while_loop trips of *independent* lanes; per-lane
+step semantics are exactly ``run_batch``'s (itself proven bit-identical
+to the solo host loop), and a refill replaces the lane's entire state,
+so residency history cannot leak between requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ipgc
+from repro.core.engine import ColoringResult
+from repro.core.policy import (Timer, device_threshold, make_chunk_policy,
+                               make_policy)
+from repro.core.worklist import Worklist, bucket_capacities, pick_bucket
+from repro.exec.batch import (_batched_chunk, _pow2, empty_lane,
+                              grow_shape_class, lane_colors, shape_class_for)
+from repro.exec.spec import ExecutionSpec
+from repro.graphs.csr import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Scheduling knobs of a ``StreamSession`` (perf-only: none of these
+    change results — the bit-identity contract holds for any values)."""
+
+    #: resident lanes per shape-class group (rounded up to a power of
+    #: two so the compiled program is shared with equal-sized batches)
+    lanes: int = 8
+    #: refill cadence: int = fixed trips per dispatch, "auto" = drain-
+    #: rate-steered AdaptiveChunk, or a policy object (core/policy.py).
+    #: A policy *object* is shared by every lane group; int/"auto" get
+    #: one instance per group.
+    chunk: "int | str | object" = "auto"
+    #: queue bound — submissions beyond it trigger the shed policy
+    max_queue: int = 64
+    #: admission control: requests above this are rejected, and the
+    #: node-rung ladder (pick_bucket) is anchored here
+    max_nodes: int = 1 << 20
+    #: overload policy: "reject-new", "shed-oldest", or a callable
+    #: ``(queued: tuple[Ticket], incoming: Ticket) -> Ticket`` returning
+    #: the victim (the incoming ticket or a queued one)
+    shed: "str | object" = "reject-new"
+    #: map each result's colors through its graph's Permutation
+    map_to_original: bool = False
+    #: timestamp source for latency accounting; None = time.perf_counter
+    clock: "object | None" = None
+
+
+@dataclasses.dataclass(eq=False)
+class Ticket:
+    """One request's handle: status, result, and latency stamps.
+
+    Identity semantics (``eq=False``): a ticket IS the request — queue
+    membership and shed-victim checks compare by object, never by field
+    values, so two requests for the same graph stay distinct.
+    """
+
+    seq: int
+    graph: object
+    n_nodes: int
+    #: "queued" -> "admitted" -> "done" | "failed"; or "rejected"
+    status: str = "queued"
+    reason: "str | None" = None
+    result: "ColoringResult | None" = None
+    enqueue_s: "float | None" = None
+    admit_s: "float | None" = None
+    drain_s: "float | None" = None
+    admit_round: "int | None" = None
+    drain_round: "int | None" = None
+    #: chunk dispatches this request was resident for
+    chunks: int = 0
+
+    @property
+    def finished(self) -> bool:
+        return self.status in ("done", "failed", "rejected")
+
+    @property
+    def queue_seconds(self) -> "float | None":
+        if self.admit_s is None:
+            return None
+        return self.admit_s - self.enqueue_s
+
+    @property
+    def service_seconds(self) -> "float | None":
+        if self.drain_s is None or self.admit_s is None:
+            return None
+        return self.drain_s - self.admit_s
+
+    @property
+    def total_seconds(self) -> "float | None":
+        if self.drain_s is None:
+            return None
+        return self.drain_s - self.enqueue_s
+
+
+class _LaneGroup:
+    """Resident lanes of one (node rung, window, layout kind) bucket.
+
+    Holds the lane-stacked graph + per-lane carried state between chunk
+    dispatches. All device state is owned here (not by the session
+    cache), so cache eviction between rounds can never corrupt a live
+    stream — it only costs a re-pad on the next shape-class growth.
+    """
+
+    def __init__(self, stream: "StreamSession", rung: int, window: int,
+                 kind: str, first_ig):
+        self.stream = stream
+        self.rung, self.window, self.kind = rung, window, kind
+        self.sc = shape_class_for([first_ig], rung, window, kind)
+        self.b = _pow2(stream.config.lanes)
+        self.chunk_policy = (stream._shared_chunk
+                             or make_chunk_policy(stream.config.chunk))
+        self.tickets: "list[Ticket | None]" = [None] * self.b
+        #: per-lane (graph, prepared ig) for sticky-growth re-stacking
+        self.lane_igs: list = [None] * self.b
+        n_pad = self.sc.n_pad
+        self.colors = jnp.stack([lane_colors(0, n_pad)] * self.b)
+        self.wl = _stacked_empty(self.b, n_pad)
+        self.thresh = jnp.zeros((self.b,), jnp.int32)
+        self.iters = jnp.zeros((self.b,), jnp.int32)
+        self.nd = jnp.zeros((self.b,), jnp.int32)
+        self.ns = jnp.zeros((self.b,), jnp.int32)
+        self.stacked = None
+        self.aux = None
+        self._restack()
+
+    # -- lane management -----------------------------------------------------
+
+    def free_lane(self) -> "int | None":
+        for i, t in enumerate(self.tickets):
+            if t is None:
+                return i
+        return None
+
+    @property
+    def resident(self) -> int:
+        return sum(t is not None for t in self.tickets)
+
+    def _pad(self, g, ig):
+        st = self.stream
+        key = ("pad", id(g), self.sc, st._alg, st.spec.priority,
+               st.spec.layout, st.spec.window)
+        return st.session.cached(
+            key, lambda: (g, ipgc.pad_prepared(
+                ig, self.sc.n_pad, self.sc.k_pad, self.sc.t_pad,
+                self.sc.nh_pad)))[1]
+
+    def _restack(self) -> None:
+        """Rebuild the lane-stacked graph under the current ShapeClass.
+
+        Carried per-lane state (colors / aux / worklist / counters)
+        depends only on ``n_pad`` — constant within a group — so it is
+        deliberately NOT touched here; only the graph arrays re-pad.
+        ``aux`` is rebuilt solely on first call (it is stacked from the
+        padded lanes, but every algorithm's aux shape is a function of
+        ``n_pad`` alone, never of the ELL/tail/hub pads).
+        """
+        st = self.stream
+        lanes = [st._empty(self.sc) if pair is None else self._pad(*pair)
+                 for pair in self.lane_igs]
+        self.stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
+        if self.aux is None:
+            self.aux = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[st._alg.init_state(lane)[1] for lane in lanes])
+        # program-cache bookkeeping — same key family as run_batch, so
+        # a stream round and an equal static batch share the entry
+        st.session.cached(
+            ("batch-program", self.sc, self.b, st._algo_static, st._fused,
+             st._force_hub, st.spec.impl, st._tile_rows), lambda: True)
+        st.restacks += 1
+
+    def admit(self, lane: int, tk: Ticket, ig) -> None:
+        st = self.stream
+        grown = grow_shape_class(self.sc, ig)
+        if grown != self.sc:
+            self.sc = grown
+            self._restack()
+        n_pad = self.sc.n_pad
+        rn = ig.n_nodes
+        self.tickets[lane] = tk
+        self.lane_igs[lane] = (tk.graph, ig)
+        self.stacked = jax.tree.map(
+            lambda s, l: s.at[lane].set(l), self.stacked,
+            self._pad(tk.graph, ig))
+        self.colors = self.colors.at[lane].set(lane_colors(rn, n_pad))
+        self.aux = jax.tree.map(
+            lambda a, v: a.at[lane].set(v), self.aux,
+            st._alg.init_state(self._pad(tk.graph, ig))[1])
+        ar = jnp.arange(n_pad, dtype=jnp.int32)
+        row = ar < rn
+        self.wl = Worklist(
+            mask=self.wl.mask.at[lane].set(row),
+            items=self.wl.items.at[lane].set(
+                jnp.where(row, ar, n_pad).astype(jnp.int32)),
+            count=self.wl.count.at[lane].set(rn))
+        self.thresh = self.thresh.at[lane].set(
+            device_threshold(st._pol, rn))
+        self.iters = self.iters.at[lane].set(0)
+        self.nd = self.nd.at[lane].set(0)
+        self.ns = self.ns.at[lane].set(0)
+        tk.status = "admitted"
+        tk.admit_s = st.clock()
+        tk.admit_round = st.round
+
+    # -- one chunk dispatch + harvest ----------------------------------------
+
+    def dispatch(self) -> int:
+        """Run one chunk over the resident lanes; harvest drained ones.
+        Returns the number of requests that finished this round."""
+        st = self.stream
+        resident = self.resident
+        if resident == 0:
+            return 0
+        chunk = int(self.chunk_policy())
+        with Timer() as t:
+            (self.colors, self.aux, self.wl, trips, self.iters, self.nd,
+             self.ns) = _batched_chunk(
+                self.stacked, self.colors, self.aux, self.wl, self.thresh,
+                self.iters, self.nd, self.ns,
+                jnp.asarray(st.spec.max_iter, jnp.int32),
+                jnp.asarray(chunk, jnp.int32),
+                algo=st._algo_static, window=self.window, impl=st.spec.impl,
+                fused=st._fused, force_hub=st._force_hub,
+                tile_rows=st._tile_rows)
+            counts = np.asarray(self.wl.count)   # device sync
+        st.dispatch_seconds += t.seconds
+        iters_np = np.asarray(self.iters)
+        nd_np, ns_np = np.asarray(self.nd), np.asarray(self.ns)
+        colors_np = None
+        finished = 0
+        for lane, tk in enumerate(self.tickets):
+            if tk is None:
+                continue
+            tk.chunks += 1
+            done = int(counts[lane]) == 0
+            capped = int(iters_np[lane]) >= st.spec.max_iter
+            if not (done or capped):
+                continue
+            if colors_np is None:
+                colors_np = np.asarray(self.colors)
+            self._harvest(lane, tk, colors_np, counts, iters_np,
+                          nd_np, ns_np, done)
+            finished += 1
+        self.chunk_policy.observe_round(finished, resident, int(trips))
+        return finished
+
+    def _harvest(self, lane, tk, colors_np, counts, iters_np, nd_np, ns_np,
+                 done) -> None:
+        st = self.stream
+        g, ig = self.lane_igs[lane]
+        rn = ig.n_nodes
+        if done:
+            final, n_colors = st._alg.finalize(colors_np[lane, :rn].copy())
+            if (st.config.map_to_original
+                    and getattr(g, "perm", None) is not None):
+                final = g.perm.colors_to_original(final)
+            tk.status = "done"
+            tk.drain_s = st.clock()
+            tk.drain_round = st.round
+            tk.result = ColoringResult(
+                colors=final, n_colors=n_colors,
+                iterations=int(iters_np[lane]),
+                mode_trace=("D" * int(nd_np[lane])
+                            + "S" * int(ns_np[lane])),
+                counts=[rn], tti=[],
+                total_seconds=tk.service_seconds or 0.0,
+                host_dispatches=tk.chunks)
+        else:
+            tk.status = "failed"
+            tk.drain_s = st.clock()
+            tk.drain_round = st.round
+            tk.reason = (f"hit max_iter={st.spec.max_iter} with "
+                         f"{int(counts[lane])} undrained nodes")
+        st._note_finished(tk.status)
+        # free the lane; its stale state stays inert (count == 0, or
+        # iters >= max_iter keeps the lane out of the active mask) and
+        # is fully overwritten by the next admit
+        self.tickets[lane] = None
+        self.lane_igs[lane] = None
+
+
+def _stacked_empty(b: int, n_pad: int) -> Worklist:
+    return Worklist(mask=jnp.zeros((b, n_pad), bool),
+                    items=jnp.full((b, n_pad), n_pad, jnp.int32),
+                    count=jnp.zeros((b,), jnp.int32))
+
+
+class StreamSession:
+    """Continuous-batching coloring service over one ``Session``.
+
+    Construct via ``Session.stream(spec, config)``. The execution
+    configuration (algorithm, fused family, policy thresholds, tile
+    rows) is frozen at construction with exactly ``run_batch``'s
+    resolution rules, so every admission shares the compiled chunk
+    program — and the admission contract is the same loud
+    ``spec.validate_batchable()``.
+    """
+
+    def __init__(self, session, spec: ExecutionSpec,
+                 config: "StreamConfig | None" = None):
+        from repro.algos.ipgc_algo import IPGC
+        self.session = session
+        self.spec = spec
+        self.config = config or StreamConfig()
+        self._alg = spec.validate_batchable()
+        self._fused = self._alg.resolve_fused(spec.fused, default=False)
+        self._force_hub = ipgc.force_hub_enabled()
+        self._tile_rows = (spec.tile_rows
+                           if isinstance(spec.tile_rows, int) else None)
+        self._algo_static = None if self._alg == IPGC() else self._alg
+        self._pol = make_policy(spec.mode, spec.h)
+        self._caps = bucket_capacities(self.config.max_nodes,
+                                       ratio=spec.bucket_ratio)
+        # a chunk policy OBJECT is shared across groups; int/"auto"
+        # resolve per group (each group adapts its own cadence)
+        if isinstance(self.config.chunk, (int, str)):
+            make_chunk_policy(self.config.chunk)   # validate the knob early
+            self._shared_chunk = None
+        else:
+            self._shared_chunk = make_chunk_policy(self.config.chunk)
+        self.clock = self.config.clock or time.perf_counter
+        self._queue: deque[Ticket] = deque()
+        self._groups: dict[tuple, _LaneGroup] = {}
+        self._seq = 0
+        self.round = 0
+        self.dispatch_seconds = 0.0
+        self.restacks = 0
+        self.counters = {"submitted": 0, "admitted": 0, "done": 0,
+                         "failed": 0, "rejected": 0}
+
+    # -- client surface ------------------------------------------------------
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._queue)
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and all(
+            g.resident == 0 for g in self._groups.values())
+
+    def submit(self, g) -> Ticket:
+        """Enqueue one request; never blocks, never raises for load.
+
+        Structural errors (wrong type, a layout the batched Pipe cannot
+        stack) raise exactly like ``run_batch``; *load* problems come
+        back as a rejected ticket with a reason.
+        """
+        if not isinstance(g, Graph):
+            raise TypeError(
+                "StreamSession needs host Graph objects (it pads and "
+                f"stacks prepared arrays); got {type(g).__name__}")
+        tk = Ticket(seq=self._seq, graph=g, n_nodes=g.n_nodes)
+        self._seq += 1
+        self.counters["submitted"] += 1
+        tk.enqueue_s = self.clock()
+        if g.n_nodes > self.config.max_nodes:
+            return self._reject(
+                tk, f"graph has {g.n_nodes} nodes, above the service "
+                    f"bound max_nodes={self.config.max_nodes}")
+        # prepare eagerly: the group key needs the resolved window and
+        # layout kind, and a rejected layout must fail loudly at submit
+        _, ig, _ = self.session._prepare(self.spec, g, self._alg)
+        if ig.layout_kind == "csr-segment":
+            raise NotImplementedError(
+                "the streaming service has no csr-segment lanes (per-"
+                "graph edge arrays are not lane-stacked); pass "
+                "layout='ell-tail' to stream this graph")
+        if len(self._queue) >= self.config.max_queue:
+            victim = self._pick_victim(tk)
+            if victim is tk:
+                return self._reject(
+                    tk, f"queue full ({self.config.max_queue} waiting) "
+                        "and shed policy rejects new requests")
+            self._queue.remove(victim)
+            self._reject(
+                victim, f"queue full: shed in favour of newer request "
+                        f"#{tk.seq}")
+        self._queue.append(tk)
+        return tk
+
+    def pump(self) -> dict:
+        """One scheduling round: admit, dispatch each group one chunk,
+        harvest. Refill happens ONLY here — between chunk dispatches."""
+        self.round += 1
+        with self.session.pin():
+            admitted = self._admit()
+            finished = 0
+            for key in sorted(self._groups):
+                finished += self._groups[key].dispatch()
+        self.counters["admitted"] += admitted
+        return {"round": self.round, "admitted": admitted,
+                "finished": finished, "queued": len(self._queue)}
+
+    def drain(self, *, max_stall: "int | None" = None) -> None:
+        """Pump until every submitted request reaches a terminal status.
+
+        The stall guard bounds no-progress rounds: a resident lane
+        advances >= 1 iteration per round (chunk >= 1), so within
+        ``max_iter`` rounds it must drain or fail — more stalled rounds
+        than that means the scheduler is wedged, and the service raises
+        instead of hanging.
+        """
+        limit = (max_stall if max_stall is not None
+                 else self.spec.max_iter + 2)
+        stall = 0
+        while not self.idle:
+            info = self.pump()
+            if info["admitted"] or info["finished"]:
+                stall = 0
+            else:
+                stall += 1
+                if stall > limit:
+                    raise RuntimeError(
+                        f"stream starvation: {stall} rounds with no "
+                        f"admission or drain (queue={len(self._queue)})")
+
+    def run(self, graphs) -> "list[ColoringResult]":
+        """Batch-compatible convenience: stream ``graphs`` and return
+        results in input order (pumping for queue space instead of
+        shedding, so no request is lost to backpressure)."""
+        tickets = []
+        for g in graphs:
+            while len(self._queue) >= self.config.max_queue:
+                self.pump()
+            tickets.append(self.submit(g))
+        self.drain()
+        out = []
+        for tk in tickets:
+            if tk.status != "done":
+                raise RuntimeError(
+                    f"stream request #{tk.seq} {tk.status}: {tk.reason}")
+            out.append(tk.result)
+        return out
+
+    def stats(self) -> dict:
+        return {**self.counters, "rounds": self.round,
+                "restacks": self.restacks,
+                "dispatch_seconds": round(self.dispatch_seconds, 6),
+                "groups": len(self._groups), "queued": len(self._queue)}
+
+    # -- scheduling internals ------------------------------------------------
+
+    def _reject(self, tk: Ticket, reason: str) -> Ticket:
+        tk.status = "rejected"
+        tk.reason = reason
+        self.counters["rejected"] += 1
+        return tk
+
+    def _pick_victim(self, incoming: Ticket) -> Ticket:
+        shed = self.config.shed
+        if shed == "reject-new":
+            return incoming
+        if shed == "shed-oldest":
+            return self._queue[0]
+        victim = shed(tuple(self._queue), incoming)
+        if victim is not incoming and victim not in self._queue:
+            raise ValueError(
+                "shed policy must return the incoming ticket or a "
+                "queued one")
+        return victim
+
+    def _group_for(self, ig, window: int) -> _LaneGroup:
+        key = (pick_bucket(self._caps, ig.n_nodes), window, ig.layout_kind)
+        grp = self._groups.get(key)
+        if grp is None:
+            grp = self._groups[key] = _LaneGroup(self, *key, ig)
+        return grp
+
+    def _empty(self, sc):
+        return self.session.cached(("empty-lane", sc),
+                                   lambda: empty_lane(sc))
+
+    def _admit(self) -> int:
+        """FIFO scan with skip-blocked: oldest first, but a full group
+        does not block younger requests bound for groups with space."""
+        admitted = 0
+        leftover: deque[Ticket] = deque()
+        while self._queue:
+            tk = self._queue.popleft()
+            _, ig, window = self.session._prepare(self.spec, tk.graph,
+                                                  self._alg)
+            grp = self._group_for(ig, window)
+            lane = grp.free_lane()
+            if lane is None:
+                leftover.append(tk)
+                continue
+            grp.admit(lane, tk, ig)
+            admitted += 1
+        self._queue = leftover
+        return admitted
+
+    # -- bookkeeping hook used by _LaneGroup._harvest ------------------------
+
+    def _note_finished(self, status: str) -> None:
+        self.counters[status] += 1

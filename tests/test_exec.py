@@ -120,7 +120,7 @@ def test_warm_session_hits_and_stats(graphs):
     assert s.stats.hits >= 1
     assert 0.0 < s.stats.hit_rate <= 1.0
     d = s.stats.as_dict()
-    assert set(d) == {"hits", "misses", "hit_rate"}
+    assert set(d) == {"hits", "misses", "evictions", "hit_rate"}
 
 
 def test_default_session_backs_the_legacy_entry_points(graphs):
@@ -145,6 +145,7 @@ def test_session_bounded_cache_evicts_fifo():
     assert list(s.cache) == [("k", 2), ("k", 3)]     # oldest evicted
     s.cached(("k", 3), lambda: 99)                    # still a hit
     assert s.stats.hits == 1 and s.stats.misses == 4
+    assert s.stats.evictions == 2
     # the process-default session is bounded; explicit sessions are not
     from repro.exec import reset_default_session
     reset_default_session()
@@ -153,6 +154,31 @@ def test_session_bounded_cache_evicts_fifo():
         assert Session().max_entries is None
     finally:
         reset_default_session()
+
+
+def test_session_pin_protects_live_entries_from_eviction():
+    s = Session(max_entries=2)
+    with s.pin():
+        for i in range(5):
+            s.cached(("k", i), lambda i=i: i)
+        # every entry was touched under the pin: the bound is exceeded
+        # rather than evicting a live run's own artifacts
+        assert len(s.cache) == 5 and s.stats.evictions == 0
+    # outermost exit restores the bound against the then-oldest entries
+    assert len(s.cache) == 2 and s.stats.evictions == 3
+    assert list(s.cache) == [("k", 3), ("k", 4)]
+
+
+def test_session_pin_marks_hits_and_nests():
+    s = Session(max_entries=2)
+    s.cached(("old",), lambda: 0)
+    with s.pin():
+        s.cached(("old",), lambda: 0)     # a pinned HIT is protected too
+        with s.pin():                     # inner pin extends the outer scope
+            s.cached(("a",), lambda: 1)
+        s.cached(("b",), lambda: 2)       # over bound: evicts nothing pinned
+        assert set(s.cache) == {("old",), ("a",), ("b",)}
+    assert len(s.cache) == 2 and ("old",) not in s.cache
 
 
 def test_dist_cache_keys_by_content_like_legacy_steps_cache():

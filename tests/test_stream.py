@@ -1,0 +1,394 @@
+"""Continuous-batching streaming service (DESIGN.md §11): bit-identity
+to solo runs under adversarial arrival orders, scheduler invariants
+(property-based tests skip individually with a reason when hypothesis is
+absent — see _hyp), fake-clock latency accounting, backpressure, and the
+bounded-cache-under-streaming regression."""
+import random
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.policy import AdaptiveChunk, FixedChunk, make_chunk_policy
+from repro.core.worklist import bucket_capacities, pick_bucket
+from repro.exec import ExecutionSpec, Session
+from repro.graphs import make_graph
+from repro.graphs.registry import get_dataset_batch, heavy_tail_requests
+from repro.serve import ManualClock, StreamConfig, StreamSession
+
+# one small mixed-family pool, built once; sizes straddle several
+# hundred..several thousand nodes so arrival order matters (iteration
+# counts differ) while everything shares one node rung (fast compiles)
+_POOL_SPECS = [("europe_osm_s", 0.001), ("hollywood-2009_s", 0.005),
+               ("soc-LiveJournal1_s", 0.01), ("europe_osm_s", 0.004),
+               ("kron_g500-logn21_s", 0.003), ("hollywood-2009_s", 0.02)]
+
+
+_POOL: list = []
+
+
+def _pool():
+    # lazy module-level pool (not a fixture: the hypothesis tests need
+    # it too, and mixing pytest fixtures into @given is fragile)
+    if not _POOL:
+        _POOL.extend(make_graph(n, scale=s, seed=i)
+                     for i, (n, s) in enumerate(_POOL_SPECS))
+        _POOL.append(_POOL[0])   # a duplicate request (same Graph object)
+    return _POOL
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return _pool()
+
+
+_SOLO_CACHE: dict = {}
+
+
+def _solo(spec, g):
+    key = (spec.static_key(), id(g))
+    if key not in _SOLO_CACHE:
+        _SOLO_CACHE[key] = Session().run(spec, g)
+    return _SOLO_CACHE[key]
+
+
+def _assert_matches_solo(spec, tickets):
+    for tk in tickets:
+        assert tk.status == "done", (tk.status, tk.reason)
+        ref = _solo(spec, tk.graph)
+        np.testing.assert_array_equal(tk.result.colors, ref.colors)
+        assert tk.result.n_colors == ref.n_colors
+        assert tk.result.iterations == ref.iterations
+        assert tk.result.mode_trace == ref.mode_trace
+
+
+def _order(graphs, how, seed=0):
+    idx = list(range(len(graphs)))
+    if how == "asc":
+        idx.sort(key=lambda i: graphs[i].n_nodes)
+    elif how == "desc" or how == "big-first":
+        idx.sort(key=lambda i: -graphs[i].n_nodes)
+    elif how == "shuffled":
+        random.Random(seed).shuffle(idx)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: streamed == solo, per request, for any arrival order
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arrival", ["asc", "desc", "shuffled", "big-first"])
+@pytest.mark.parametrize("algo,fused", [("ipgc", False), ("ipgc", True),
+                                        ("jpl", None),
+                                        ("spec-greedy", None)])
+def test_stream_bit_identical_to_solo(pool, algo, fused, arrival):
+    spec = ExecutionSpec(regime="host", algo=algo, fused=fused, window=64)
+    stream = Session().stream(spec, StreamConfig(lanes=2, chunk=3))
+    tickets = [stream.submit(pool[i]) for i in _order(pool, arrival)]
+    stream.drain()
+    _assert_matches_solo(spec, tickets)
+
+
+def test_stream_chunk_cadence_never_changes_results(pool):
+    spec = ExecutionSpec(regime="host", window=64)
+    base = None
+    for chunk in (1, 7, "auto", AdaptiveChunk(min_iters=1, max_iters=4)):
+        s = Session()
+        res = s.stream(spec, StreamConfig(lanes=2, chunk=chunk)).run(pool)
+        if base is None:
+            base = res
+        else:
+            for r, b in zip(res, base):
+                np.testing.assert_array_equal(r.colors, b.colors)
+                assert (r.iterations, r.mode_trace) == \
+                    (b.iterations, b.mode_trace)
+
+
+def test_stream_mixed_layouts_and_auto_window(pool):
+    # hub-split and ell-tail members land in different lane groups but
+    # one stream schedules both; window="auto" also varies per graph
+    gs = [make_graph("europe_osm_s", scale=0.002, layout="ell-tail"),
+          make_graph("hollywood-2009_s", scale=0.01, layout="hub-split"),
+          make_graph("europe_osm_s", scale=0.004, layout="ell-tail")]
+    spec = ExecutionSpec(regime="host")
+    stream = Session().stream(spec, StreamConfig(lanes=2, chunk=2))
+    tickets = [stream.submit(g) for g in gs]
+    stream.drain()
+    assert len(stream._groups) >= 2
+    _assert_matches_solo(spec, tickets)
+
+
+def test_stream_run_matches_run_batch(pool):
+    spec = ExecutionSpec(regime="host", window=64)
+    s = Session()
+    streamed = s.stream(spec, StreamConfig(lanes=4)).run(pool)
+    batched = s.run_batch(spec, pool)
+    for r, b in zip(streamed, batched):
+        np.testing.assert_array_equal(r.colors, b.colors)
+        assert (r.iterations, r.mode_trace) == (b.iterations, b.mode_trace)
+
+
+def test_stream_rejects_unbatchable_specs_loudly(pool):
+    with pytest.raises(ValueError, match="regime"):
+        Session().stream(ExecutionSpec(regime="outlined"))
+    with pytest.raises(ValueError, match="impl"):
+        Session().stream(ExecutionSpec(regime="host", impl="pallas"))
+    with pytest.raises(ValueError, match="monotone"):
+        Session().stream(ExecutionSpec(regime="host", mode="hybrid-auto"))
+    stream = Session().stream(ExecutionSpec(regime="host"))
+    with pytest.raises(TypeError, match="host Graph"):
+        stream.submit(np.arange(3))
+    g = make_graph("kron_g500-logn21_s", scale=0.01, layout="csr-segment")
+    with pytest.raises(NotImplementedError, match="csr-segment"):
+        stream.submit(g)
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**30), st.integers(1, 2), st.integers(1, 4),
+       st.integers(1, 3))
+def test_stream_scheduler_invariants(seed, lanes, chunk, dups):
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(spec, StreamConfig(lanes=lanes, chunk=chunk,
+                                                 max_queue=256))
+    rng = random.Random(seed)
+    reqs = [g for g in _pool() for _ in range(dups)]
+    rng.shuffle(reqs)
+    tickets = [stream.submit(g) for g in reqs]
+    stream.drain()
+    # no request lost or duplicated: every ticket terminal, exactly one
+    # result per submission, seqs unique
+    assert len({tk.seq for tk in tickets}) == len(reqs)
+    assert all(tk.status == "done" for tk in tickets)
+    assert stream.counters["done"] == len(reqs)
+    assert stream.idle
+    # refill only at chunk boundaries: admissions happen in pump rounds,
+    # and a request is resident from its admit round to its drain round
+    for tk in tickets:
+        assert 1 <= tk.admit_round <= tk.drain_round <= stream.round
+        # no starvation: a resident lane advances >= 1 iteration per
+        # dispatch, so residency is bounded by the solo iteration count
+        assert 1 <= tk.chunks <= tk.result.iterations
+    _assert_matches_solo(spec, tickets)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 2**30))
+def test_stream_queue_never_exceeds_bound(bound, seed):
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(spec, StreamConfig(lanes=1, chunk=1,
+                                                 max_queue=bound))
+    rng = random.Random(seed)
+    tickets = []
+    for _ in range(3 * bound + 4):
+        tickets.append(stream.submit(rng.choice(_pool())))
+        assert stream.queue_len <= bound
+        if rng.random() < 0.3:
+            stream.pump()
+            assert stream.queue_len <= bound
+    stream.drain()
+    assert stream.queue_len == 0
+    done = [tk for tk in tickets if tk.status == "done"]
+    rejected = [tk for tk in tickets if tk.status == "rejected"]
+    assert len(done) + len(rejected) == len(tickets)
+    assert all(tk.reason for tk in rejected)
+    _assert_matches_solo(spec, done)
+
+
+# ---------------------------------------------------------------------------
+# latency accounting (fake clock)
+# ---------------------------------------------------------------------------
+
+def test_stream_latency_stamps_monotone_and_additive(pool):
+    clk = ManualClock(start=10.0, tick=0.25)
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(
+        spec, StreamConfig(lanes=2, chunk=2, clock=clk))
+    tickets = [stream.submit(g) for g in pool]
+    stream.drain()
+    for tk in tickets:
+        assert tk.enqueue_s <= tk.admit_s <= tk.drain_s
+        assert tk.queue_seconds >= 0 and tk.service_seconds >= 0
+        # enqueue->admit and admit->drain partition the total latency
+        assert tk.queue_seconds + tk.service_seconds == \
+            pytest.approx(tk.total_seconds)
+        assert tk.result.host_dispatches == tk.chunks
+
+
+def test_stream_overload_rejects_immediately_instead_of_hanging(pool):
+    clk = ManualClock(tick=1.0)
+    stream = Session().stream(
+        ExecutionSpec(regime="host", window=64),
+        StreamConfig(lanes=1, max_queue=1, clock=clk))
+    first = stream.submit(pool[0])
+    second = stream.submit(pool[1])      # queue full: bounced, no pump
+    assert first.status == "queued" and second.status == "rejected"
+    assert "queue full" in second.reason
+    assert second.admit_s is None and second.drain_s is None
+    stream.drain()
+    assert first.status == "done"
+
+
+def test_manual_clock_is_monotone():
+    clk = ManualClock(start=1.0, tick=0.5)
+    assert (clk(), clk()) == (1.0, 1.5)
+    clk.advance(2.0)
+    assert clk() == 4.0
+    with pytest.raises(ValueError, match="monotone"):
+        clk.advance(-1.0)
+    with pytest.raises(ValueError, match="tick"):
+        ManualClock(tick=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# backpressure / admission control
+# ---------------------------------------------------------------------------
+
+def test_stream_shed_oldest_bounces_the_queue_head(pool):
+    stream = Session().stream(
+        ExecutionSpec(regime="host", window=64),
+        StreamConfig(lanes=1, max_queue=2, shed="shed-oldest"))
+    a, b, c = (stream.submit(pool[0]), stream.submit(pool[1]),
+               stream.submit(pool[2]))
+    assert a.status == "rejected" and "shed" in a.reason
+    assert (b.status, c.status) == ("queued", "queued")
+    stream.drain()
+    assert b.status == "done" and c.status == "done"
+
+
+def test_stream_shed_policy_hook(pool):
+    def keep_smallest(queued, incoming):
+        return max((*queued, incoming), key=lambda tk: tk.n_nodes)
+
+    stream = Session().stream(
+        ExecutionSpec(regime="host", window=64),
+        StreamConfig(lanes=1, max_queue=1, shed=keep_smallest))
+    big = max(pool, key=lambda g: g.n_nodes)
+    small = min(pool, key=lambda g: g.n_nodes)
+    t_big = stream.submit(big)
+    t_small = stream.submit(small)       # displaces the bigger request
+    assert t_big.status == "rejected" and t_small.status == "queued"
+
+    bad = Session().stream(
+        ExecutionSpec(regime="host", window=64),
+        StreamConfig(lanes=1, max_queue=1,
+                     shed=lambda queued, incoming: object()))
+    bad.submit(pool[0])
+    with pytest.raises(ValueError, match="shed policy"):
+        bad.submit(pool[1])
+
+
+def test_stream_rejects_oversized_requests(pool):
+    g = max(pool, key=lambda g: g.n_nodes)
+    stream = Session().stream(
+        ExecutionSpec(regime="host", window=64),
+        StreamConfig(max_nodes=g.n_nodes - 1))
+    tk = stream.submit(g)
+    assert tk.status == "rejected" and "max_nodes" in tk.reason
+
+
+def test_stream_max_iter_exhaustion_fails_the_ticket_not_the_service(pool):
+    host = ExecutionSpec(regime="host", window=64)
+    solo_iters = {id(g): _solo(host, g).iterations for g in pool}
+    g_bad = max(pool, key=lambda g: solo_iters[id(g)])
+    g_good = min(pool, key=lambda g: solo_iters[id(g)])
+    cap = solo_iters[id(g_bad)] - 1
+    assert solo_iters[id(g_good)] <= cap     # the cap only bites g_bad
+    spec = ExecutionSpec(regime="host", window=64, max_iter=cap)
+    stream = Session().stream(spec, StreamConfig(lanes=2, chunk=2))
+    bad = stream.submit(g_bad)
+    good = stream.submit(g_good)         # unaffected neighbour lane
+    stream.drain()
+    assert bad.status == "failed" and "max_iter" in bad.reason
+    assert bad.result is None
+    assert good.status == "done"
+    with pytest.raises(RuntimeError, match="failed"):
+        stream.run([g_bad])              # run() surfaces the failure
+
+
+def test_chunk_policy_knob_resolution():
+    assert isinstance(make_chunk_policy(4), FixedChunk)
+    assert make_chunk_policy(4)() == 4
+    assert isinstance(make_chunk_policy("auto"), AdaptiveChunk)
+    pol = AdaptiveChunk(min_iters=2, max_iters=16, iters=4)
+    assert make_chunk_policy(pol) is pol
+    pol.observe_round(0, 3, 4)           # nobody drained: cadence doubles
+    assert pol() == 8
+    pol.observe_round(2, 3, 8)           # half drained: cadence halves
+    assert pol() == 4
+    with pytest.raises(ValueError, match=">= 1"):
+        make_chunk_policy(0)
+    with pytest.raises(TypeError, match="chunk"):
+        make_chunk_policy(True)
+    with pytest.raises(TypeError, match="chunk"):
+        make_chunk_policy("fast")
+
+
+# ---------------------------------------------------------------------------
+# bounded default-session cache under streaming (regression)
+# ---------------------------------------------------------------------------
+
+def test_bounded_session_streams_without_evicting_live_entries(pool):
+    # a tiny bound forces evictions mid-stream; results must still be
+    # bit-identical because a pump round pins its own entries and all
+    # device state is owned by the lane groups, not the cache
+    spec = ExecutionSpec(regime="host", window=64)
+    s = Session(max_entries=6)
+    stream = s.stream(spec, StreamConfig(lanes=2, chunk=2))
+    tickets = [stream.submit(g) for g in pool]
+    stream.drain()
+    _assert_matches_solo(spec, tickets)
+    assert s.stats.evictions > 0          # the bound really was exercised
+    assert len(s.cache) <= 6              # and re-established after
+
+
+def test_default_session_stream_entry_point(pool):
+    from repro.exec import default_session, reset_default_session
+    reset_default_session()
+    try:
+        spec = ExecutionSpec(regime="host", window=64)
+        stream = default_session().stream(spec)
+        assert isinstance(stream, StreamSession)
+        res = stream.run(pool[:2])
+        for r, g in zip(res, pool[:2]):
+            ref = _solo(spec, g)
+            np.testing.assert_array_equal(r.colors, ref.colors)
+    finally:
+        reset_default_session()
+
+
+# ---------------------------------------------------------------------------
+# heavy-tailed request mixes (graphs/registry)
+# ---------------------------------------------------------------------------
+
+def test_heavy_tail_requests_deterministic_under_seed():
+    a = heavy_tail_requests(32, seed=7)
+    b = heavy_tail_requests(32, seed=7)
+    c = heavy_tail_requests(32, seed=8)
+    assert a == b and a != c and len(a) == 32
+
+
+def test_heavy_tail_batch_covers_multiple_rungs():
+    gs = get_dataset_batch(heavy_tail=16, seed=7)
+    assert len(gs) == 16
+    caps = bucket_capacities(1 << 20, ratio=2)
+    rungs = {pick_bucket(caps, g.n_nodes) for g in gs}
+    assert len(rungs) >= 2
+    # popular repeated cells collapse onto shared Graph objects
+    assert len({id(g) for g in gs}) < len(gs)
+    again = get_dataset_batch(heavy_tail=16, seed=7)
+    assert [g.n_nodes for g in gs] == [g.n_nodes for g in again]
+
+
+def test_heavy_tail_knob_validation():
+    with pytest.raises(ValueError, match="exactly one"):
+        get_dataset_batch(["europe_osm_s"], heavy_tail=4)
+    with pytest.raises(ValueError, match="exactly one"):
+        get_dataset_batch()
+    with pytest.raises(ValueError, match="node-parameterized"):
+        heavy_tail_requests(4, names=("Audikw_1_s",))
+    with pytest.raises(ValueError, match="min_nodes"):
+        heavy_tail_requests(4, min_nodes=0)
