@@ -80,20 +80,21 @@ from repro.graphs import make_suite
 DIST_GRAPHS = ["europe_osm_s", "kron_g500-logn21_s", "hollywood-2009_s"]
 
 MODES = {
-    "hybrid_host": lambda g: color(g, mode="hybrid", outline=False,
-                                   collect_tti=True),
-    "hybrid_host_fused": lambda g: color(g, mode="hybrid", fused=True,
-                                         outline=False, collect_tti=True),
+    "hybrid_host": lambda g, **kw: color(g, mode="hybrid", outline=False,
+                                         collect_tti=True, **kw),
+    "hybrid_host_fused": lambda g, **kw: color(g, mode="hybrid", fused=True,
+                                               outline=False,
+                                               collect_tti=True, **kw),
     # fused=False so outlined-vs-host isolates dispatch outlining; the
     # _fused row isolates step fusion (fused=None would pick per backend)
-    "hybrid_outlined": lambda g: color_outlined_hybrid(g, fused=False,
-                                                       collect_tti=True),
-    "hybrid_outlined_fused": lambda g: color_outlined_hybrid(
-        g, fused=True, collect_tti=True),
-    "dense": lambda g: color(g, mode="topology", outline=False,
-                             collect_tti=True),
-    "sparse": lambda g: color(g, mode="data", outline=False,
-                              collect_tti=True),
+    "hybrid_outlined": lambda g, **kw: color_outlined_hybrid(
+        g, fused=False, collect_tti=True, **kw),
+    "hybrid_outlined_fused": lambda g, **kw: color_outlined_hybrid(
+        g, fused=True, collect_tti=True, **kw),
+    "dense": lambda g, **kw: color(g, mode="topology", outline=False,
+                                   collect_tti=True, **kw),
+    "sparse": lambda g, **kw: color(g, mode="data", outline=False,
+                                    collect_tti=True, **kw),
 }
 
 
@@ -104,7 +105,12 @@ def bench(scale: float = 0.05, runs: int = 3, quiet: bool = False,
     for name, g in suite.items():
         row: dict[str, dict] = {}
         for mode, fn in MODES.items():
-            warm = fn(g)                      # compile + TTI capture
+            # the warm pass runs traced: the row is assembled FROM the
+            # RunReport (DESIGN.md §12) so the JSON carries the unified
+            # counters — launches/iter, gathers, timing split — next to
+            # the legacy keys older trend tooling reads. Timed repeats
+            # stay untraced: `seconds` is the bare engine number.
+            warm = fn(g, trace=True)          # compile + TTI capture
             verify_coloring(g, warm.colors, context=f"{name}/{mode}")
             best = min(fn(g).total_seconds for _ in range(runs))
             row[mode] = {
@@ -113,6 +119,10 @@ def bench(scale: float = 0.05, runs: int = 3, quiet: bool = False,
                 "n_colors": warm.n_colors,
                 "host_dispatches": warm.host_dispatches,
                 "tti": [round(t, 6) for t in warm.tti],
+                "launches_per_iter": warm.launches.get("per_iter", {}),
+                "gathers_per_iter": warm.gathers.get("per_iter", {}),
+                "timing": {k: round(v, 6) if isinstance(v, float) else v
+                           for k, v in warm.timing.items()},
             }
         report["graphs"][name] = row
         if not quiet:
@@ -489,11 +499,14 @@ def bench_stream(count: int = 20, max_nodes: int = 4_000, lanes: int = 4,
         np.testing.assert_array_equal(rb.colors, ref.colors)
 
     ratio = t_static.seconds / t_stream.seconds
-    totals = sorted(tk.total_seconds for tk in tickets)
-    queues = [tk.queue_seconds for tk in tickets]
+    # latency percentiles come from the stream's own fixed-bucket
+    # histograms (obs/metrics.py) — the same numbers a live service
+    # exports, not a recomputation over retained samples
+    h_total = stream.metrics.get("stream.total_seconds")
+    h_queue = stream.metrics.get("stream.queue_seconds")
 
     def pct(p):
-        return round(float(np.percentile(totals, p)), 4)
+        return round(float(h_total.percentile(p)), 4)
 
     report = {
         "backend": jax.default_backend(),
@@ -509,10 +522,11 @@ def bench_stream(count: int = 20, max_nodes: int = 4_000, lanes: int = 4,
         "stream_vs_static": round(ratio, 2),
         "acceptance_ge_2x": ratio >= 2.0,
         "latency": {"p50_s": pct(50), "p90_s": pct(90), "p99_s": pct(99),
-                    "max_s": round(totals[-1], 4),
-                    "mean_queue_s": round(float(np.mean(queues)), 4)},
+                    "max_s": round(h_total.max, 4),
+                    "mean_queue_s": round(h_queue.mean, 4)},
         "chunk_dispatches": sum(tk.chunks for tk in tickets),
         "stream_stats": stream.stats(),
+        "metrics": stream.metrics.as_dict(),
         "verified_bit_identical": len(tickets),
     }
     if not quiet:
@@ -687,6 +701,118 @@ def bench_kernels(scale: float = 0.02, rows: int = 2048, runs: int = 5,
     return report
 
 
+def bench_obs(scale: float = 0.02, runs: int = 5, quiet: bool = False,
+              out_path: str | None = "BENCH_obs.json") -> dict:
+    """Telemetry overhead gate (DESIGN.md §12) -> ``BENCH_obs.json``.
+
+    Two acceptance numbers:
+
+      * **overhead** — per graph x regime, best-of-``runs`` wall seconds
+        of a traced ``Session.run`` (span recording + dispatch meter +
+        RunReport assembly, profile cache warm) over best-of-``runs``
+        untraced. Acceptance: geomean ratio <= 1.03 — telemetry must be
+        effectively free, or nobody leaves it on.
+      * **jaxpr identity** — the step jaxpr built with an ambient Trace
+        and live counter scopes is STRING-IDENTICAL to one built clean.
+        Telemetry lives at trace time only; a counter that leaked into
+        the program would shift every compile cache and potentially the
+        schedule. This is the compile-level proof backing the
+        bit-identity run checks in tests/test_obs.py.
+
+    A full sample ``RunReport.to_json()`` rides along so the report
+    schema itself is under version control and schema drift shows up in
+    diffs.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ipgc
+    from repro.core.policy import Timer
+    from repro.core.worklist import full_worklist
+    from repro.exec import ExecutionSpec, Session
+    from repro.graphs import make_graph
+    from repro.obs import Trace, tracing
+
+    specs = {
+        "host": ExecutionSpec(regime="host", window=64),
+        "outlined": ExecutionSpec(regime="outlined", window=64),
+    }
+    sess = Session()
+    report: dict = {"scale": scale, "runs": runs,
+                    "backend": jax.default_backend(), "graphs": {},
+                    "threshold": 1.03}
+    ratios = []
+    sample = None
+    for name in DIST_GRAPHS:
+        g = make_graph(name, scale=scale)
+        row: dict[str, dict] = {}
+        for rname, spec in specs.items():
+            plain_ref = sess.run(spec, g)            # compile pass
+            rep = sess.run(spec, g, trace=True)      # + profile cache warm
+            verify_coloring(g, rep.colors, context=f"{name}/{rname}")
+            np.testing.assert_array_equal(rep.colors, plain_ref.colors)
+            assert rep.mode_trace == plain_ref.mode_trace
+
+            def best_of(traced: bool) -> float:
+                times = []
+                for _ in range(runs):
+                    with Timer() as t:
+                        sess.run(spec, g, trace=True if traced else None)
+                    times.append(t.seconds)
+                return min(times)
+
+            plain_s, traced_s = best_of(False), best_of(True)
+            ratio = traced_s / max(plain_s, 1e-12)
+            ratios.append(ratio)
+            row[rname] = {
+                "untraced_seconds": round(plain_s, 6),
+                "traced_seconds": round(traced_s, 6),
+                "ratio": round(ratio, 4),
+                "iterations": rep.iterations,
+                "spans": len(list(rep.trace.walk())),
+            }
+            if sample is None:
+                sample = rep.to_json()
+        report["graphs"][name] = row
+        if not quiet:
+            print(csv_row(name, *(f"{rname} {c['ratio']:.3f}x"
+                                  for rname, c in row.items())))
+
+    # jaxpr identity: instrumentation on vs off, same program text
+    g = make_graph(DIST_GRAPHS[0], scale=scale)
+    ig = ipgc.prepare(g)
+    state = (ipgc.init_colors(ig.n_nodes),
+             jnp.zeros((ig.n_nodes,), jnp.int32),
+             full_worklist(ig.n_nodes))
+    identical = True
+    for step in (ipgc.fused_dense_step_impl, ipgc.dense_step_impl,
+                 ipgc.sparse_step_impl):
+        fn = functools.partial(step, ig, window=64, impl="jnp",
+                               force_hub=None, tile_rows=None)
+        clean = str(jax.make_jaxpr(fn)(*state))
+        with tracing(Trace()), ipgc.LAUNCH_COUNTS.scope(), \
+                ipgc.GATHER_COUNTS.scope():
+            instrumented = str(jax.make_jaxpr(fn)(*state))
+        identical = identical and (clean == instrumented)
+    report["jaxpr_identical_traced_vs_untraced"] = identical
+
+    gm = geomean(ratios)
+    report["geomean_traced_vs_untraced"] = round(gm, 4)
+    report["acceptance_overhead_le_3pct"] = gm <= report["threshold"]
+    report["sample_report"] = sample
+    if not quiet:
+        print(csv_row("GEOMEAN traced vs untraced", f"{gm:.4f}x",
+                      f"jaxpr identical: {identical}"))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        if not quiet:
+            print(f"# wrote {out_path}")
+    return report
+
+
 def _reexec_with_devices(argv: list[str], n_devices: int) -> int:
     """Re-exec this module with forced host-platform devices (XLA binds the
     device count at first import, so it cannot be changed in-process).
@@ -744,6 +870,10 @@ def main() -> None:
     ap.add_argument("--stream-count", type=int, default=20,
                     help="heavy-tail request count for --stream")
     ap.add_argument("--stream-out", default="BENCH_stream.json")
+    ap.add_argument("--obs", action="store_true",
+                    help="telemetry overhead + jaxpr-identity gate "
+                         "-> BENCH_obs.json")
+    ap.add_argument("--obs-out", default="BENCH_obs.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI fast path: tiny scale, 1 run, no JSON for the "
                          "host bench, dist bench on 1,2,8 shards (or the "
@@ -751,6 +881,12 @@ def main() -> None:
     args = ap.parse_args()
     shards = tuple(int(s) for s in args.shards.split(","))
 
+    if args.obs:
+        o_scale, o_runs = (0.01, 3) if args.smoke else (args.scale,
+                                                        args.runs)
+        print(csv_row("graph", "host ratio", "outlined ratio"))
+        bench_obs(scale=o_scale, runs=o_runs, out_path=args.obs_out)
+        return
     if args.stream:
         st_count, st_nodes = ((8, 3_000) if args.smoke
                               else (args.stream_count, 4_000))

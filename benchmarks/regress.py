@@ -1,0 +1,156 @@
+"""Perf-regression gate over the committed ``BENCH_*.json`` baselines
+(DESIGN.md §12).
+
+Raw seconds are machine-bound — a committed baseline from one CI runner
+says nothing about another's clock. Every benchmark leg therefore also
+records at least one **dimensionless ratio** (a speedup of one in-process
+configuration over another, measured back-to-back on the same machine),
+and THOSE are what this gate compares:
+
+  ====================  =====================================  ==========
+  baseline file         metric (higher is better)              floor
+  ====================  =====================================  ==========
+  BENCH_engine.json     geomean_outlined_vs_host               committed
+  BENCH_kernels.json    fused_compact_geomean_speedup          committed
+  BENCH_stream.json     stream_vs_static                       committed
+  BENCH_serve.json      best_speedup_batch_ge_8                committed
+  BENCH_obs.json        geomean_traced_vs_untraced (LOWER is   committed
+                        better: telemetry overhead)
+  ====================  =====================================  ==========
+
+A fresh run regresses when its ratio falls below ``(1 - tolerance)`` of
+the committed value (or rises above, for lower-is-better metrics). The
+default tolerance is deliberately loose (15%): ratios of best-of-N runs
+are stable, but CI machines are shared — the gate exists to catch "the
+fused path stopped being faster", not 2% jitter.
+
+Usage (compare fresh JSONs in cwd against committed ones in --baseline):
+
+  PYTHONPATH=src python -m benchmarks.regress --baseline <git worktree>
+  PYTHONPATH=src python -m benchmarks.regress --fresh out/ --report-only
+
+``--report-only`` always exits 0 (the CI wiring: the report is a
+non-blocking PR signal; promotion to a hard gate is one flag flip).
+Missing files on either side are reported and skipped, never fatal —
+legs run on different CI cadences.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# metric registry: file -> (json key path, higher_is_better)
+METRICS: dict[str, tuple[tuple[str, ...], bool]] = {
+    "BENCH_engine.json": (("geomean_outlined_vs_host",), True),
+    "BENCH_kernels.json": (("fused_compact_geomean_speedup",), True),
+    "BENCH_stream.json": (("stream_vs_static",), True),
+    "BENCH_serve.json": (("best_speedup_batch_ge_8",), True),
+    "BENCH_obs.json": (("geomean_traced_vs_untraced",), False),
+}
+
+DEFAULT_TOLERANCE = 0.15
+
+
+def _dig(doc: dict, path: tuple[str, ...]):
+    for k in path:
+        if not isinstance(doc, dict) or k not in doc:
+            return None
+        doc = doc[k]
+    return doc
+
+
+def _load(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        return doc if isinstance(doc, dict) else None
+    except (OSError, ValueError):
+        return None
+
+
+def compare(baseline_dir: str, fresh_dir: str,
+            tolerance: float = DEFAULT_TOLERANCE) -> dict:
+    """Compare every registered metric; returns the structured verdict.
+
+    ``{"results": [{file, metric, baseline, fresh, ratio, status}...],
+    "regressions": int, "skipped": int}`` — ``status`` is one of
+    ``ok`` / ``regressed`` / ``improved`` / ``skipped:<why>``.
+    """
+    results = []
+    regressions = skipped = 0
+    for fname, (path, higher_better) in METRICS.items():
+        entry = {"file": fname, "metric": "/".join(path)}
+        base_doc = _load(os.path.join(baseline_dir, fname))
+        fresh_doc = _load(os.path.join(fresh_dir, fname))
+        base = _dig(base_doc, path) if base_doc else None
+        fresh = _dig(fresh_doc, path) if fresh_doc else None
+        if not isinstance(base, (int, float)) or base <= 0:
+            entry["status"] = "skipped:no-baseline"
+            skipped += 1
+        elif not isinstance(fresh, (int, float)) or fresh <= 0:
+            entry["status"] = "skipped:no-fresh-run"
+            entry["baseline"] = base
+            skipped += 1
+        else:
+            ratio = fresh / base
+            entry.update(baseline=round(base, 4), fresh=round(fresh, 4),
+                         ratio=round(ratio, 4))
+            if higher_better:
+                bad = ratio < 1.0 - tolerance
+                good = ratio > 1.0 + tolerance
+            else:
+                bad = ratio > 1.0 + tolerance
+                good = ratio < 1.0 - tolerance
+            entry["status"] = ("regressed" if bad
+                               else "improved" if good else "ok")
+            regressions += bad
+        results.append(entry)
+    return {"tolerance": tolerance, "results": results,
+            "regressions": regressions, "skipped": skipped}
+
+
+def format_report(verdict: dict) -> str:
+    lines = [f"# perf-regression gate (tolerance "
+             f"{verdict['tolerance'] * 100:.0f}%)"]
+    for e in verdict["results"]:
+        if e["status"].startswith("skipped"):
+            lines.append(f"  {e['file']:22s} {e['metric']:34s} "
+                         f"-- {e['status']}")
+        else:
+            lines.append(f"  {e['file']:22s} {e['metric']:34s} "
+                         f"{e['baseline']:.3f} -> {e['fresh']:.3f} "
+                         f"({e['ratio']:.3f}x)  {e['status'].upper()}")
+    lines.append(f"# {verdict['regressions']} regression(s), "
+                 f"{verdict['skipped']} skipped")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff fresh BENCH_*.json ratio metrics against the "
+                    "committed baselines")
+    ap.add_argument("--baseline", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the freshly generated JSONs")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
+    ap.add_argument("--out", default=None,
+                    help="also write the structured verdict JSON here")
+    ap.add_argument("--report-only", action="store_true",
+                    help="always exit 0 (CI non-blocking report mode)")
+    args = ap.parse_args(argv)
+
+    verdict = compare(args.baseline, args.fresh, tolerance=args.tolerance)
+    print(format_report(verdict))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(verdict, f, indent=1)
+    if args.report_only:
+        return 0
+    return 1 if verdict["regressions"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,7 @@ number. With ``--tables`` the paper's original experiment tables
   PYTHONPATH=src python examples/color_suite.py --tables
 """
 import argparse
+import json
 
 from repro.algos import algorithm_names, get_algorithm
 from repro.core import verify_coloring
@@ -33,6 +34,10 @@ ap.add_argument("--reorder", default="identity",
                 help="graph pipeline node reordering")
 ap.add_argument("--tables", action="store_true",
                 help="also reproduce the paper's Tables III & IV")
+ap.add_argument("--json", action="store_true",
+                help="run traced (DESIGN.md §12) and emit one RunReport "
+                     "JSON object per (graph, algo) row on stdout instead "
+                     "of the CSV table")
 args = ap.parse_args()
 
 algos = args.algo or algorithm_names()
@@ -42,10 +47,11 @@ algos = args.algo or algorithm_names()
 # warm-cache behaviour a serving deployment sees
 session = Session()
 
-print(f"== registry sweep: {', '.join(algos)} "
-      f"(mode={args.mode}, outline={args.outline}, layout={args.layout}, "
-      f"reorder={args.reorder}) ==")
-print("graph,layout,algo,ms,iterations,colors")
+if not args.json:
+    print(f"== registry sweep: {', '.join(algos)} "
+          f"(mode={args.mode}, outline={args.outline}, "
+          f"layout={args.layout}, reorder={args.reorder}) ==")
+    print("graph,layout,algo,ms,iterations,colors")
 for name in SUITE_SPECS:
     g = get_dataset(name, scale=args.scale, layout=args.layout,
                     reorder=args.reorder)
@@ -53,8 +59,12 @@ for name in SUITE_SPECS:
               else get_dataset(name, scale=args.scale, layout=args.layout))
     for algo in algos:
         alg = get_algorithm(algo)
+        # --json runs traced: the same run returns a full RunReport
+        # (launches/iter, timing split, cache hit-rate) at the cost of
+        # span bookkeeping; the CSV path stays untraced
         r = session.run(spec_for(mode=args.mode, algo=alg,
-                                 outline=args.outline), g)
+                                 outline=args.outline), g,
+                        trace=True if args.json else None)
         # fail loudly: a conflict or uncolored node raises, the script
         # exits non-zero, and no misleading row is printed; reordered
         # graphs verify on the ORIGINAL ids via the inverse permutation
@@ -62,10 +72,17 @@ for name in SUITE_SPECS:
                   else g.perm.colors_to_original(r.colors))
         verify_coloring(g_orig, colors, context=f"{name}/{algo}")
         alg.check_invariants(r, g)
-        print(f"{name},{g.layout.kind},{algo},{r.total_seconds * 1e3:.2f},"
-              f"{r.iterations},{r.n_colors}")
+        if args.json:
+            doc = r.to_json()
+            doc["graph"] = name          # the dataset name, not repr(g)
+            print(json.dumps(doc))
+        else:
+            print(f"{name},{g.layout.kind},{algo},"
+                  f"{r.total_seconds * 1e3:.2f},"
+                  f"{r.iterations},{r.n_colors}")
 
-print(f"# session cache after sweep: {session.stats.as_dict()}")
+if not args.json:
+    print(f"# session cache after sweep: {session.stats.as_dict()}")
 
 if args.tables:
     from benchmarks.bench_table3_speedup import bench as bench_speed

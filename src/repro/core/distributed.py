@@ -44,18 +44,23 @@ from repro.core.engine import ColoringResult
 from repro.core.policy import Policy
 from repro.core.worklist import Worklist, compact_items, resize_block
 from repro.graphs.csr import Graph, NO_COLOR
+from repro.obs.metrics import default_registry
 
 # --- exchange instrumentation (trace-time) ---------------------------------
 # Every color-vector exchange goes through ``_exchange_colors`` so tests can
 # assert the communication volume per step: one psum'd int32[N+1] delta per
 # fused iteration, two per two-phase iteration. Counters increment at trace
 # time (à la ipgc.GATHER_COUNTS) — inspect by tracing a step with
-# ``jax.eval_shape``.
-EXCHANGE_COUNTS = {"color_psum": 0}
+# ``jax.eval_shape`` inside an ``EXCHANGE_COUNTS.scope()`` block. The
+# group is a reset-scoped ``CounterGroup`` in the obs default registry
+# (DESIGN.md §12); scopes zero on entry and restore outer values on exit.
+EXCHANGE_COUNTS = default_registry().group("dist.exchanges",
+                                           ("color_psum",))
 
 
 def reset_exchange_counts() -> None:
-    EXCHANGE_COUNTS["color_psum"] = 0
+    """Legacy zeroing hook; prefer ``EXCHANGE_COUNTS.scope()``."""
+    EXCHANGE_COUNTS.reset()
 
 
 def _exchange_colors(colors: jax.Array, delta: jax.Array,

@@ -163,6 +163,9 @@ def color(
     tile_rows: "int | str | None" = "auto",  # Pallas row-tile height; "auto"
     #                               consults the persistent tuner
     #                               (kernels/tune.py) per layout kind
+    trace=None,                   # True / obs.Trace: return a RunReport
+    #                               (telemetry; DESIGN.md §12) instead of
+    #                               the bare ColoringResult
 ) -> ColoringResult:
     # thin dispatcher: translate the legacy keyword surface into an
     # ExecutionSpec and run it on the process-default session (the one
@@ -174,7 +177,7 @@ def color(
                     priority=priority, fused=fused, outline=outline,
                     n_shards=n_shards, layout=layout, tile_rows=tile_rows)
     return default_session().run(spec, g, policy=policy,
-                                 collect_tti=collect_tti)
+                                 collect_tti=collect_tti, trace=trace)
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +201,7 @@ def color_outlined_hybrid(
     fused: bool | None = None,
     layout: "str | object | None" = None,
     tile_rows: "int | str | None" = "auto",
+    trace=None,
 ) -> ColoringResult:
     """Device-resident hybrid Pipe: ~O(#buckets) host dispatches total.
 
@@ -229,7 +233,7 @@ def color_outlined_hybrid(
         max_iter=max_iter, priority=priority, fused=fused,
         tile_rows=tile_rows)
     return default_session().run(spec, g, policy=policy,
-                                 collect_tti=collect_tti)
+                                 collect_tti=collect_tti, trace=trace)
 
 
 def color_outlined(

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.graphs.csr import Graph, NO_COLOR, PAD_COLOR
 from repro.core.worklist import Worklist, compact_items, compact_mask
+from repro.obs.metrics import default_registry
 
 
 @jax.tree_util.register_dataclass
@@ -236,8 +237,10 @@ def _has_hubs(ig: IPGCGraph, force_hub: bool | None) -> bool:
 # ``_gather_neighbor_colors`` so tests can assert how many such gathers a
 # step performs (the fused step's contract is exactly one; the two-phase
 # steps perform two). Counters increment at trace time — inspect them by
-# tracing the raw ``*_impl`` functions with ``jax.eval_shape``.
-GATHER_COUNTS = {"neighbor_colors": 0}
+# tracing the raw ``*_impl`` functions with ``jax.eval_shape`` inside a
+# ``GATHER_COUNTS.scope()`` block (DESIGN.md §12).
+GATHER_COUNTS = default_registry().group("ipgc.gathers",
+                                         ("neighbor_colors",))
 
 # Kernel-launch accounting (trace-time, like GATHER_COUNTS): every
 # logical device pass a step emits bumps one bucket, so "one iteration is
@@ -249,17 +252,22 @@ GATHER_COUNTS = {"neighbor_colors": 0}
 #                         paths, the one-sweep segment core on
 #                         csr-segment)
 # Inspect by tracing the raw ``*_impl`` functions with ``jax.eval_shape``
-# (see ``core/policy.measure_launches``).
-LAUNCH_COUNTS = {"mex": 0, "conflict": 0, "compact": 0, "fused": 0}
+# under ``LAUNCH_COUNTS.scope()`` (see ``core/policy.measure_launches``).
+# Both groups are reset-scoped ``CounterGroup``s registered in the obs
+# default registry — the scope zeroes on entry and RESTORES outer values
+# on exit, so measurements cannot pollute each other across tests.
+LAUNCH_COUNTS = default_registry().group(
+    "ipgc.launches", ("mex", "conflict", "compact", "fused"))
 
 
 def reset_gather_counts() -> None:
-    GATHER_COUNTS["neighbor_colors"] = 0
+    """Legacy zeroing hook; prefer ``GATHER_COUNTS.scope()``."""
+    GATHER_COUNTS.reset()
 
 
 def reset_launch_counts() -> None:
-    for k in LAUNCH_COUNTS:
-        LAUNCH_COUNTS[k] = 0
+    """Legacy zeroing hook; prefer ``LAUNCH_COUNTS.scope()``."""
+    LAUNCH_COUNTS.reset()
 
 
 def _gather_neighbor_colors(colors: jax.Array, rows: jax.Array) -> jax.Array:

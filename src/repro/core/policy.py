@@ -248,13 +248,18 @@ def measure_launches(step_impl, ig, colors, aux, wl, **step_kw) -> dict:
     is ``{"fused": 1}`` with every other bucket 0, which is how the
     engine's "one iteration = one kernel launch" claim is asserted in
     tests and reported by ``bench_engine_modes --kernels``.
+
+    The measurement runs inside ``LAUNCH_COUNTS.scope()`` (obs/
+    metrics.py): the group is zeroed for the trace and the caller's
+    counter values are restored afterwards, so measuring can never
+    pollute — or be polluted by — surrounding accounting.
     """
     import functools
     import jax
 
     from repro.core import ipgc
 
-    before = dict(ipgc.LAUNCH_COUNTS)
-    jax.eval_shape(functools.partial(step_impl, ig, **step_kw),
-                   colors, aux, wl)
-    return {k: ipgc.LAUNCH_COUNTS[k] - before[k] for k in before}
+    with ipgc.LAUNCH_COUNTS.scope() as lc:
+        jax.eval_shape(functools.partial(step_impl, ig, **step_kw),
+                       colors, aux, wl)
+        return lc.as_dict()

@@ -52,6 +52,7 @@ from repro.core.worklist import (bucket_capacities, pick_bucket,
                                  stacked_worklist)
 from repro.exec.spec import ExecutionSpec
 from repro.graphs.csr import NO_COLOR, PAD_COLOR, Graph
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -309,7 +310,9 @@ def _run_batch_pinned(session, spec, alg, graphs, *, map_to_original):
                         force_hub, spec.impl, tile_rows), lambda: True)
 
         z = jnp.zeros((b_pad,), jnp.int32)
-        with Timer() as t:
+        with obs_trace.maybe_span("batch.dispatch", lanes=len(idxs),
+                                  b_pad=b_pad, n_pad=sc.n_pad,
+                                  window=window, kind=kind), Timer() as t:
             colors, aux, wl, _, iters, nd, ns = _batched_chunk(
                 stacked, colors0, aux0, wl0, thresh, z, z, z,
                 jnp.asarray(spec.max_iter, jnp.int32),

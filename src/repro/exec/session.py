@@ -48,12 +48,14 @@ from repro.core import ipgc
 from repro.core.engine import (ColoringResult, adaptive_window,
                                resolve_plan)
 from repro.core.policy import (AutoTuned, Policy, Timer, device_threshold,
-                               make_policy)
+                               make_policy, measure_launches)
 from repro.core.worklist import (bucket_capacities, chunk_lower_bounds,
                                  pick_bucket, resize_items)
 from repro.exec.spec import ExecutionSpec
 from repro.graphs.csr import Graph
 from repro.kernels.tune import resolve_tile_rows
+from repro.obs import trace as obs_trace
+from repro.obs.report import RunReport, exchange_section, totals_from_trace
 
 
 @dataclasses.dataclass
@@ -78,6 +80,46 @@ class CacheStats:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+
+
+@dataclasses.dataclass
+class _DispatchMeter:
+    """Per-run device-dispatch accounting, filled by the drivers when a
+    run is traced (DESIGN.md §12).
+
+    ``first - best`` is the report's *compile proxy*: the first dispatch
+    of a cold entry pays trace+compile, steady-state dispatches don't —
+    a proxy, exact only when steady-state dispatches are homogeneous.
+    ``statics`` snapshots the driver's resolved static arguments so the
+    work profiler replays exactly the resolution the run used.
+    """
+
+    dispatch_seconds: float = 0.0
+    first: "float | None" = None
+    best: "float | None" = None
+    n: int = 0
+    statics: "dict | None" = None
+
+    def add(self, seconds: float) -> None:
+        self.dispatch_seconds += seconds
+        if self.first is None:
+            self.first = seconds
+        self.best = seconds if self.best is None else min(self.best, seconds)
+        self.n += 1
+
+    def timing(self, total_seconds: float) -> dict:
+        first = self.first or 0.0
+        best = self.best or 0.0
+        return {
+            "total_seconds": total_seconds,
+            "dispatch_seconds": self.dispatch_seconds,
+            "dispatches": self.n,
+            "first_dispatch_seconds": first,
+            "best_dispatch_seconds": best,
+            "compile_proxy_seconds": max(0.0, first - best),
+            "host_overhead_seconds": max(
+                0.0, total_seconds - self.dispatch_seconds),
+        }
 
 
 def _graph_key(g) -> tuple:
@@ -170,20 +212,56 @@ class Session:
 
     def run(self, spec: ExecutionSpec, g, *, policy: Policy | None = None,
             collect_tti: bool = False, mesh=None,
-            node_axes: tuple = ("data",)) -> ColoringResult:
-        """Execute ``spec`` on one graph in its declared regime."""
+            node_axes: tuple = ("data",), trace=None):
+        """Execute ``spec`` on one graph in its declared regime.
+
+        ``trace`` turns on telemetry (DESIGN.md §12): pass ``True`` for
+        a fresh ``obs.Trace``, or a ``Trace`` instance to append to one
+        (e.g. with an injected clock). A traced run returns a
+        ``RunReport`` — the same ``ColoringResult`` (under ``.result``,
+        with passthrough properties) PLUS span timings, per-iteration
+        launch/gather/exchange profiles, the compile-vs-execute split
+        and a cache snapshot. Telemetry is host-side only: the traced
+        run's jaxprs — and therefore its colors — are bit-identical to
+        the untraced run's (tests/test_obs.py).
+        """
+        if trace is None or trace is False:
+            return self._execute(spec, g, policy=policy,
+                                 collect_tti=collect_tti, mesh=mesh,
+                                 node_axes=node_axes)
+        tr = obs_trace.Trace() if trace is True else trace
+        meter = _DispatchMeter()
+        stats0 = dataclasses.replace(self.stats)
+        with obs_trace.tracing(tr):
+            with tr.span("session.run", regime=spec.regime, mode=spec.mode,
+                         algo=str(spec.algo), graph=self._graph_name(g)):
+                result = self._execute(spec, g, policy=policy,
+                                       collect_tti=collect_tti, mesh=mesh,
+                                       node_axes=node_axes, meter=meter)
+                with tr.span("obs.profile"):
+                    profile = self._work_profile(meter)
+        return self._assemble_report(spec, g, result, meter, profile,
+                                     stats0, tr)
+
+    def _execute(self, spec: ExecutionSpec, g, *, policy, collect_tti,
+                 mesh, node_axes, meter=None) -> ColoringResult:
         if spec.regime == "dist":
             return self._run_dist(spec, g, policy=policy,
                                   collect_tti=collect_tti, mesh=mesh,
-                                  node_axes=node_axes)
+                                  node_axes=node_axes, meter=meter)
         if spec.regime == "outlined":
             return self._run_outlined(spec, g, policy=policy,
-                                      collect_tti=collect_tti)
+                                      collect_tti=collect_tti, meter=meter)
         return self._run_host(spec, g, policy=policy,
-                              collect_tti=collect_tti)
+                              collect_tti=collect_tti, meter=meter)
+
+    @staticmethod
+    def _graph_name(g) -> str:
+        name = getattr(g, "name", None)
+        return name if name else f"<prepared n={g.n_nodes}>"
 
     def run_batch(self, spec: ExecutionSpec, graphs,
-                  *, map_to_original: bool = False) -> list[ColoringResult]:
+                  *, map_to_original: bool = False, trace=None):
         """Color MANY graphs in one (or few) device dispatches.
 
         See exec/batch.py for the shape-class bucketing contract; results
@@ -191,10 +269,37 @@ class Session:
         per graph (spec_host = the same spec in the host regime).
         ``map_to_original=True`` additionally maps each lane's colors
         back through its graph's ``Permutation`` (reordered pipelines).
+
+        With ``trace`` (True or a ``Trace``), returns a batch-level
+        ``RunReport`` instead: ``.result`` holds the per-graph result
+        list, ``extra["lanes"]`` the per-lane summaries, and the trace
+        records one ``batch.dispatch`` span per shape-class bucket.
         """
         from repro.exec import batch as _batch
-        return _batch.run_batch(self, spec, graphs,
-                                map_to_original=map_to_original)
+        if trace is None or trace is False:
+            return _batch.run_batch(self, spec, graphs,
+                                    map_to_original=map_to_original)
+        tr = obs_trace.Trace() if trace is True else trace
+        stats0 = dataclasses.replace(self.stats)
+        graphs = list(graphs)
+        with obs_trace.tracing(tr):
+            with tr.span("batch.run", graphs=len(graphs)) as sp:
+                results = _batch.run_batch(
+                    self, spec, graphs, map_to_original=map_to_original)
+        total = sp.seconds if sp.seconds is not None else 0.0
+        lanes = [{"graph": self._graph_name(g), "n_nodes": g.n_nodes,
+                  "n_colors": r.n_colors, "iterations": r.iterations,
+                  "mode_trace": r.mode_trace}
+                 for g, r in zip(graphs, results)]
+        return RunReport(
+            regime="batch", algo=str(spec.algo), graph=f"<{len(graphs)}>",
+            n_nodes=sum(g.n_nodes for g in graphs),
+            n_colors=max((r.n_colors for r in results), default=0),
+            iterations=max((r.iterations for r in results), default=0),
+            host_dispatches=len(tr.find("batch.dispatch")),
+            timing={"total_seconds": total},
+            cache=self._cache_section(stats0),
+            result=results, trace=tr, extra={"lanes": lanes})
 
     def stream(self, spec: ExecutionSpec, config=None):
         """A continuous-batching service over this session's cache.
@@ -206,6 +311,117 @@ class Session:
         """
         from repro.serve.stream import StreamSession
         return StreamSession(self, spec, config)
+
+    # -- telemetry: work profiling + report assembly (DESIGN.md §12) ---------
+
+    def _work_profile(self, meter: _DispatchMeter) -> dict:
+        """Per-iteration device-work profile of the run's resolved steps.
+
+        Measured exactly like the test suites measure it: the step impls
+        are traced with ``jax.eval_shape`` (no device execution) under
+        the reset-scoped counter groups, so the numbers match
+        ``measure_launches`` / the exchange-invariant tests bit-for-bit.
+        Cached under the session key space — repeated traced runs of the
+        same configuration pay a dict lookup, which is what keeps traced
+        wall time within the BENCH_obs overhead budget.
+        """
+        s = meter.statics
+        if s is None:
+            return {}
+        if s["kind"] == "dist":
+            return self._profile_dist(s)
+        alg, ig = s["alg"], s["ig"]
+        kw = dict(window=s["window"], impl=s["impl"],
+                  force_hub=s["force_hub"], tile_rows=s["tile_rows"])
+        key = ("obs-profile", "local", _graph_key(ig), alg, s["fused"],
+               tuple(sorted(kw.items())))
+
+        def build():
+            colors, aux, wl = alg.init_state(ig)
+            out = {}
+            for mode, impl_fn in zip(("dense", "sparse"),
+                                     alg.step_impls(s["fused"])):
+                with ipgc.GATHER_COUNTS.scope() as gc:
+                    launches = measure_launches(impl_fn, ig, colors, aux,
+                                                wl, **kw)
+                    gathers = gc.as_dict()
+                out[mode] = {"launches": launches, "gathers": gathers}
+            return out
+
+        return self.cached(key, build)
+
+    def _profile_dist(self, s: dict) -> dict:
+        """Launch/gather/exchange profile of the distributed steps (one
+        ``jax.eval_shape`` per mode — the exchange-invariant measurement
+        of tests/test_distributed.py, verbatim).
+
+        The steps are REBUILT for the measurement instead of reusing the
+        run's cached closures: a jit function only runs its Python body
+        (where the trace-time counters live) on its first trace, and the
+        run has already traced the cached ones. Fresh closures make
+        ``eval_shape`` re-trace; the profile itself is cached, so the
+        cost is one abstract trace per configuration.
+        """
+        from repro.core import distributed
+
+        ig = s["ig"]
+        key = ("obs-profile",) + s["dist_key"]
+
+        def build():
+            dense_fn, sparse_fn = s["alg"].make_dist_steps(
+                ig, s["mesh"], s["node_axes"], window=s["window"],
+                fused=s["fused"])
+            colors, base, wl = s["alg"].init_state(ig)
+            out = {}
+            for mode, fn in (("dense", dense_fn), ("sparse", sparse_fn)):
+                with ipgc.LAUNCH_COUNTS.scope() as lc, \
+                        ipgc.GATHER_COUNTS.scope() as gc, \
+                        distributed.EXCHANGE_COUNTS.scope() as ec:
+                    jax.eval_shape(fn, colors, base, wl)
+                    out[mode] = {"launches": lc.as_dict(),
+                                 "gathers": gc.as_dict(),
+                                 "exchanges": ec.as_dict()}
+            return out
+
+        return self.cached(key, build)
+
+    def _cache_section(self, stats0: CacheStats) -> dict:
+        """Session cache totals + this run's delta."""
+        return {**self.stats.as_dict(),
+                "run_delta": {
+                    "hits": self.stats.hits - stats0.hits,
+                    "misses": self.stats.misses - stats0.misses,
+                    "evictions": self.stats.evictions - stats0.evictions}}
+
+    def _assemble_report(self, spec, g, result, meter, profile, stats0,
+                         tr) -> RunReport:
+        def section(field):
+            per_iter = {m: profile[m][field] for m in profile}
+            return {"per_iter": per_iter,
+                    "total": totals_from_trace(result.mode_trace, per_iter)}
+
+        exchanges = None
+        if spec.regime == "dist" and profile:
+            per_iter = {m: profile[m]["exchanges"]["color_psum"]
+                        for m in profile}
+            # the psum'd delta is int32[n+1] over the PARTITIONED node
+            # count (prepare_partition pads n to a multiple of the shard
+            # count), not the caller's original n_nodes
+            exchanges = exchange_section(per_iter,
+                                         meter.statics["ig"].n_nodes,
+                                         result.mode_trace)
+        alg = spec.resolved_algo()
+        return RunReport(
+            regime=spec.regime, algo=alg.name, graph=self._graph_name(g),
+            n_nodes=g.n_nodes, n_colors=result.n_colors,
+            iterations=result.iterations, mode_trace=result.mode_trace,
+            host_dispatches=result.host_dispatches,
+            counts=list(result.counts),
+            timing=meter.timing(result.total_seconds),
+            launches=section("launches") if profile else {},
+            gathers=section("gathers") if profile else {},
+            exchanges=exchanges, cache=self._cache_section(stats0),
+            result=result, trace=tr)
 
     # -- shared preparation --------------------------------------------------
 
@@ -237,11 +453,12 @@ class Session:
 
     # -- host-loop Pipe (the regime of the seed engine) ----------------------
 
-    def _run_host(self, spec: ExecutionSpec, g, *, policy, collect_tti
-                  ) -> ColoringResult:
+    def _run_host(self, spec: ExecutionSpec, g, *, policy, collect_tti,
+                  meter=None) -> ColoringResult:
         alg = spec.resolved_algo()
         fused = alg.resolve_fused(spec.fused, default=False)
-        _, ig, window = self._prepare(spec, g, alg)
+        with obs_trace.maybe_span("session.prepare"):
+            _, ig, window = self._prepare(spec, g, alg)
         n = ig.n_nodes
         pol = policy or make_policy(spec.mode, spec.h)
         caps = bucket_capacities(n, ratio=spec.bucket_ratio)
@@ -249,6 +466,10 @@ class Session:
         tile_rows = resolve_tile_rows(spec.tile_rows, ig.layout_kind,
                                       spec.impl)
         dense_fn, sparse_fn = alg.step_fns(fused)
+        if meter is not None:
+            meter.statics = dict(kind="host", alg=alg, ig=ig, fused=fused,
+                                 window=window, impl=spec.impl,
+                                 force_hub=force_hub, tile_rows=tile_rows)
 
         colors, aux, wl = alg.init_state(ig)
         count = n
@@ -261,7 +482,9 @@ class Session:
         while count > 0 and it < spec.max_iter:
             use_dense = bool(pol(count, n))
             counts.append(count)
-            with Timer() as t:
+            with obs_trace.maybe_span(
+                    "session.iter", mode="D" if use_dense else "S",
+                    count=count), Timer() as t:
                 if use_dense:
                     colors, aux, wl = dense_fn(
                         ig, colors, aux, wl, window=window, impl=spec.impl,
@@ -275,6 +498,8 @@ class Session:
                         force_hub=force_hub, tile_rows=tile_rows)
                 count = int(wl.count)  # the Pipe's single scalar read-back
             trace.append("D" if use_dense else "S")
+            if meter is not None:
+                meter.add(t.seconds)
             if collect_tti:
                 tti.append(t.seconds)
             if isinstance(pol, AutoTuned):
@@ -290,13 +515,14 @@ class Session:
 
     # -- device-resident outlined Pipe ---------------------------------------
 
-    def _run_outlined(self, spec: ExecutionSpec, g, *, policy, collect_tti
-                      ) -> ColoringResult:
+    def _run_outlined(self, spec: ExecutionSpec, g, *, policy, collect_tti,
+                      meter=None) -> ColoringResult:
         from repro.algos.ipgc_algo import IPGC
         alg = spec.resolved_algo()
         fused = alg.resolve_fused(spec.fused,
                                   default=jax.default_backend() == "tpu")
-        _, ig, window = self._prepare(spec, g, alg)
+        with obs_trace.maybe_span("session.prepare"):
+            _, ig, window = self._prepare(spec, g, alg)
         n = ig.n_nodes
         pol = policy or make_policy(spec.mode, spec.h)
         caps = bucket_capacities(n, ratio=spec.bucket_ratio)
@@ -309,6 +535,10 @@ class Session:
         # the substitution: a subclass or re-registered variant under the
         # name "ipgc" compares unequal and traces its own step impls.
         algo_static = None if alg == IPGC() else alg
+        if meter is not None:
+            meter.statics = dict(kind="outlined", alg=alg, ig=ig,
+                                 fused=fused, window=window, impl=spec.impl,
+                                 force_hub=force_hub, tile_rows=tile_rows)
 
         colors, aux, wl = alg.init_state(ig)
         wl = resize_items(wl, caps[0], n)
@@ -336,7 +566,9 @@ class Session:
                 branch = "cond"
             counts.append(count)
             dispatches += 1
-            with Timer() as t:
+            with obs_trace.maybe_span("session.chunk", branch=branch,
+                                      count=count, cap=caps[bi]), \
+                    Timer() as t:
                 colors, aux, wl, it_dev, nd, ns = _hybrid_chunk(
                     ig, colors, aux, wl,
                     jnp.asarray(thresh, jnp.int32),
@@ -351,6 +583,8 @@ class Session:
                 count = int(wl.count)  # the chunk's single scalar read-back
             nd, ns, new_it = int(nd), int(ns), int(it_dev)
             trace.append("D" * nd + "S" * ns)
+            if meter is not None:
+                meter.add(t.seconds)
             if collect_tti:
                 tti.append(t.seconds)
             if isinstance(pol, AutoTuned):
@@ -368,7 +602,7 @@ class Session:
     # -- sharded distributed Pipe --------------------------------------------
 
     def _run_dist(self, spec: ExecutionSpec, g, *, policy, collect_tti,
-                  mesh, node_axes) -> ColoringResult:
+                  mesh, node_axes, meter=None) -> ColoringResult:
         from repro.core.distributed import make_dist_resize
         from repro.graphs.partition import prepare_partition
         alg = spec.resolved_algo()
@@ -418,9 +652,14 @@ class Session:
             return (g, g2, new_of_old, ig, window, dense_fn, sparse_fn,
                     resize_fn)
 
-        (_, g2, new_of_old, ig, window, dense_fn, sparse_fn,
-         resize_fn) = self.cached(key, build)
+        with obs_trace.maybe_span("session.prepare"):
+            (_, g2, new_of_old, ig, window, dense_fn, sparse_fn,
+             resize_fn) = self.cached(key, build)
         n = ig.n_nodes
+        if meter is not None:
+            meter.statics = dict(kind="dist", alg=alg, ig=ig, mesh=mesh,
+                                 node_axes=node_axes, window=window,
+                                 fused=fused, dist_key=key)
         block = n // n_shards
         pol = policy or make_policy(spec.mode, spec.h)
         caps = bucket_capacities(block, ratio=spec.bucket_ratio)
@@ -436,7 +675,9 @@ class Session:
         while count > 0 and it < spec.max_iter:
             use_dense = bool(pol(count, n))
             counts.append(count)
-            with Timer() as t:
+            with obs_trace.maybe_span(
+                    "session.iter", mode="D" if use_dense else "S",
+                    count=count), Timer() as t:
                 if use_dense:
                     colors, base, wl = dense_fn(colors, base, wl)
                 else:
@@ -447,6 +688,8 @@ class Session:
                     colors, base, wl = sparse_fn(colors, base, wl)
                 count = int(wl.count)  # the Pipe's single scalar read-back
             trace.append("D" if use_dense else "S")
+            if meter is not None:
+                meter.add(t.seconds)
             if collect_tti:
                 tti.append(t.seconds)
             if isinstance(pol, AutoTuned):

@@ -154,12 +154,29 @@ def _time_candidate(case, tile_rows: int) -> float:
 
 def sweep(kind: str, *, candidates: "tuple[int, ...]" = CANDIDATES
           ) -> TileConfig:
-    """Time every candidate tile height on a ``kind``-shaped workload."""
+    """Time every candidate tile height on a ``kind``-shaped workload.
+
+    Traced runs see the sweep: with an ambient ``obs.Trace`` installed
+    (obs/trace.py), the sweep records a ``tune.sweep`` span with one
+    ``tune.candidate`` child per tile height carrying its measured
+    microseconds — so a cold first run's tuning cost is attributable in
+    the Chrome-trace export instead of vanishing into "prepare time".
+    """
+    from repro.obs import trace as obs_trace
+
     if kind not in ELL_KINDS:
         return TileConfig(tile_rows=None)
     rng = np.random.default_rng(0)
     case = _sweep_case(kind, rng)
-    micros = {str(c): _time_candidate(case, c) for c in candidates}
+    micros = {}
+    with obs_trace.maybe_span("tune.sweep", kind=kind,
+                              candidates=list(candidates)):
+        for c in candidates:
+            with obs_trace.maybe_span("tune.candidate", kind=kind,
+                                      tile_rows=c) as sp:
+                micros[str(c)] = _time_candidate(case, c)
+                if sp is not None:
+                    sp.attrs["micros"] = micros[str(c)]
     best = min(micros, key=micros.get)
     return TileConfig(tile_rows=int(best), micros=micros)
 

@@ -45,6 +45,7 @@ so residency history cannot leak between requests.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -62,6 +63,9 @@ from repro.exec.batch import (_batched_chunk, _pow2, empty_lane,
                               grow_shape_class, lane_colors, shape_class_for)
 from repro.exec.spec import ExecutionSpec
 from repro.graphs.csr import Graph
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import DEPTH_EDGES, LATENCY_EDGES, MetricsRegistry
+from repro.obs.report import RunReport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +94,9 @@ class StreamConfig:
     map_to_original: bool = False
     #: timestamp source for latency accounting; None = time.perf_counter
     clock: "object | None" = None
+    #: optional ``obs.Trace``: pump rounds and chunk dispatches record
+    #: spans on it (installed as the ambient trace for each pump)
+    trace: "object | None" = None
 
 
 @dataclasses.dataclass(eq=False)
@@ -259,7 +266,10 @@ class _LaneGroup:
         if resident == 0:
             return 0
         chunk = int(self.chunk_policy())
-        with Timer() as t:
+        with obs_trace.maybe_span("stream.dispatch", rung=self.rung,
+                                  window=self.window, kind=self.kind,
+                                  resident=resident, chunk=chunk), \
+                Timer() as t:
             (self.colors, self.aux, self.wl, trips, self.iters, self.nd,
              self.ns) = _batched_chunk(
                 self.stacked, self.colors, self.aux, self.wl, self.thresh,
@@ -271,6 +281,7 @@ class _LaneGroup:
                 tile_rows=st._tile_rows)
             counts = np.asarray(self.wl.count)   # device sync
         st.dispatch_seconds += t.seconds
+        st.dispatches += 1
         iters_np = np.asarray(self.iters)
         nd_np, ns_np = np.asarray(self.nd), np.asarray(self.ns)
         colors_np = None
@@ -318,6 +329,7 @@ class _LaneGroup:
             tk.drain_round = st.round
             tk.reason = (f"hit max_iter={st.spec.max_iter} with "
                          f"{int(counts[lane])} undrained nodes")
+        st._observe_latency(tk)
         st._note_finished(tk.status)
         # free the lane; its stale state stays inert (count == 0, or
         # iters >= max_iter keeps the lane out of the active mask) and
@@ -371,9 +383,22 @@ class StreamSession:
         self._seq = 0
         self.round = 0
         self.dispatch_seconds = 0.0
+        self.dispatches = 0
         self.restacks = 0
         self.counters = {"submitted": 0, "admitted": 0, "done": 0,
                          "failed": 0, "rejected": 0}
+        #: per-service metrics (obs/metrics.py): queue-depth and latency
+        #: histograms fed by pump/harvest — fixed-bucket, so percentiles
+        #: come without storing per-ticket samples
+        self.metrics = MetricsRegistry()
+        self._h_depth = self.metrics.histogram("stream.queue_depth",
+                                               DEPTH_EDGES)
+        self._h_queue = self.metrics.histogram("stream.queue_seconds",
+                                               LATENCY_EDGES)
+        self._h_service = self.metrics.histogram("stream.service_seconds",
+                                                 LATENCY_EDGES)
+        self._h_total = self.metrics.histogram("stream.total_seconds",
+                                               LATENCY_EDGES)
 
     # -- client surface ------------------------------------------------------
 
@@ -428,13 +453,24 @@ class StreamSession:
 
     def pump(self) -> dict:
         """One scheduling round: admit, dispatch each group one chunk,
-        harvest. Refill happens ONLY here — between chunk dispatches."""
+        harvest. Refill happens ONLY here — between chunk dispatches.
+
+        Telemetry per round: the queue depth entering the round lands in
+        the ``stream.queue_depth`` histogram; with ``config.trace`` set,
+        the round runs under a ``stream.pump`` span (with per-group
+        ``stream.dispatch`` child spans)."""
         self.round += 1
-        with self.session.pin():
-            admitted = self._admit()
-            finished = 0
-            for key in sorted(self._groups):
-                finished += self._groups[key].dispatch()
+        self._h_depth.observe(len(self._queue))
+        ambient = (obs_trace.tracing(self.config.trace)
+                   if self.config.trace is not None
+                   else contextlib.nullcontext())
+        with ambient, obs_trace.maybe_span("stream.pump", round=self.round,
+                                           queued=len(self._queue)):
+            with self.session.pin():
+                admitted = self._admit()
+                finished = 0
+                for key in sorted(self._groups):
+                    finished += self._groups[key].dispatch()
         self.counters["admitted"] += admitted
         return {"round": self.round, "admitted": admitted,
                 "finished": finished, "queued": len(self._queue)}
@@ -482,9 +518,27 @@ class StreamSession:
 
     def stats(self) -> dict:
         return {**self.counters, "rounds": self.round,
+                "dispatches": self.dispatches,
                 "restacks": self.restacks,
                 "dispatch_seconds": round(self.dispatch_seconds, 6),
                 "groups": len(self._groups), "queued": len(self._queue)}
+
+    def report(self) -> RunReport:
+        """Service-level ``RunReport`` (DESIGN.md §12): the scheduling
+        counters plus the queue-depth/latency histogram summaries the
+        pump/harvest loop has accumulated so far. ``to_json()`` is the
+        machine-readable service snapshot ``bench_engine_modes
+        --stream`` records."""
+        return RunReport(
+            regime="stream", algo=str(self.spec.algo),
+            graph=f"<stream:{self.counters['submitted']} submitted>",
+            host_dispatches=self.dispatches,
+            timing={"total_seconds": self.dispatch_seconds,
+                    "dispatch_seconds": self.dispatch_seconds,
+                    "dispatches": self.dispatches},
+            trace=self.config.trace,
+            extra={"stream": self.stats(),
+                   "metrics": self.metrics.as_dict()})
 
     # -- scheduling internals ------------------------------------------------
 
@@ -537,7 +591,15 @@ class StreamSession:
         self._queue = leftover
         return admitted
 
-    # -- bookkeeping hook used by _LaneGroup._harvest ------------------------
+    # -- bookkeeping hooks used by _LaneGroup._harvest -----------------------
 
     def _note_finished(self, status: str) -> None:
         self.counters[status] += 1
+
+    def _observe_latency(self, tk: Ticket) -> None:
+        """Feed a terminal ticket's stamps into the latency histograms
+        (every harvested ticket has all three stamps; rejected tickets
+        never reach here)."""
+        self._h_queue.observe(tk.queue_seconds)
+        self._h_service.observe(tk.service_seconds)
+        self._h_total.observe(tk.total_seconds)

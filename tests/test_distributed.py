@@ -12,8 +12,7 @@ import pytest
 
 from repro.core import color, color_distributed, ipgc, verify_coloring
 from repro.core.distributed import (EXCHANGE_COUNTS, make_dist_dense_step,
-                                    make_dist_sparse_step,
-                                    reset_exchange_counts)
+                                    make_dist_sparse_step)
 from repro.core.worklist import full_worklist
 from repro.graphs import build_graph, make_graph, validate_coloring
 from repro.graphs.partition import prepare_partition
@@ -259,7 +258,8 @@ def test_exchange_count_invariant():
     for fused, want in [(True, 1), (False, 2)]:
         for make in (make_dist_dense_step, make_dist_sparse_step):
             step = make(ig, mesh, ("data",), window=32, fused=fused)
-            reset_exchange_counts()
-            jax.eval_shape(step, colors, base, wl)
-            assert EXCHANGE_COUNTS["color_psum"] == want, (make.__name__,
-                                                           fused)
+            # reset-scoped measurement (obs/metrics.py): zeroed inside,
+            # outer accounting restored on exit — no cross-test leakage
+            with EXCHANGE_COUNTS.scope() as ec:
+                jax.eval_shape(step, colors, base, wl)
+                assert ec["color_psum"] == want, (make.__name__, fused)

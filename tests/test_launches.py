@@ -10,7 +10,13 @@ counters through ``policy.measure_launches`` (the launch analogue of the
 Counters bump at *trace* time, so measurement goes through
 ``jax.eval_shape`` on the unjitted step impls: no device execution, no
 jit-cache interference, and the count is exact per iteration.
+
+Since the obs subsystem (DESIGN.md §12) the counters are reset-scoped
+``CounterGroup``s in the obs registry: ``measure_launches`` measures
+inside ``LAUNCH_COUNTS.scope()``, so suites running in one process can
+never pollute each other's counts through the module global.
 """
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -94,6 +100,42 @@ def test_tile_rows_does_not_change_launch_count(graphs):
 
 
 def test_reset_launch_counts():
-    ipgc.LAUNCH_COUNTS["fused"] += 7
-    ipgc.reset_launch_counts()
-    assert all(v == 0 for v in ipgc.LAUNCH_COUNTS.values())
+    with ipgc.LAUNCH_COUNTS.scope():
+        ipgc.LAUNCH_COUNTS["fused"] += 7
+        ipgc.reset_launch_counts()
+        assert all(v == 0 for v in ipgc.LAUNCH_COUNTS.values())
+
+
+def test_launch_scope_restores_outer_counts(graphs):
+    """The reset-scoped form: a measurement inside ``scope()`` starts
+    from zero and CANNOT leak into surrounding accounting — the fix for
+    cross-test pollution through the module-global counters."""
+    ig = ipgc.prepare(graphs["pure-ell"])
+    colors, base, wl = _state(ig)
+    with ipgc.LAUNCH_COUNTS.scope():
+        ipgc.LAUNCH_COUNTS["mex"] += 5          # outer accounting...
+        with ipgc.LAUNCH_COUNTS.scope() as lc:  # ...invisible inside
+            assert lc["mex"] == 0
+            import functools
+            jax.eval_shape(
+                functools.partial(ipgc.fused_dense_step_impl, ig,
+                                  window=32, impl="jnp", force_hub=None),
+                colors, base, wl)
+            assert lc.as_dict() == ONE_FUSED
+        # the inner measurement did not leak out
+        assert ipgc.LAUNCH_COUNTS["mex"] == 5
+        assert ipgc.LAUNCH_COUNTS["fused"] == 0
+
+
+def test_measure_launches_preserves_surrounding_counts(graphs):
+    """``measure_launches`` itself is scope-wrapped: calling it mid-run
+    leaves the caller's counters exactly as they were."""
+    ig = ipgc.prepare(graphs["pure-ell"])
+    colors, base, wl = _state(ig)
+    with ipgc.LAUNCH_COUNTS.scope():
+        ipgc.LAUNCH_COUNTS["compact"] += 3
+        got = measure_launches(ipgc.dense_step_impl, ig, colors, base, wl,
+                               window=32, impl="jnp", force_hub=None)
+        assert got == TWO_PHASE
+        assert ipgc.LAUNCH_COUNTS.as_dict() == {
+            "mex": 0, "conflict": 0, "compact": 3, "fused": 0}
