@@ -175,20 +175,43 @@ def bench_dist(shards: tuple[int, ...] = (1, 2, 8), scale: float = 0.02,
             "iterations": host.iterations, "n_colors": host.n_colors}
         cache: dict = {}   # reuse jitted steps: time post-compile wall clock
         for s in shards:
-            fn = lambda: color_distributed(g, n_shards=s,    # noqa: E731
-                                           steps_cache=cache)
-            warm = fn()                                      # compile
-            verify_coloring(g, warm.colors, context=f"{name}/shards_{s}")
-            row[f"shards_{s}"] = {
-                "seconds": min(fn().total_seconds for _ in range(runs)),
-                "iterations": warm.iterations,
-                "n_colors": warm.n_colors,
-                "mode_trace": warm.mode_trace,
-            }
+            for ex in ("dense", "auto"):
+                fn = lambda: color_distributed(               # noqa: E731
+                    g, n_shards=s, steps_cache=cache, exchange=ex)
+                warm = fn()                                   # compile
+                verify_coloring(g, warm.colors,
+                                context=f"{name}/shards_{s}/{ex}")
+                suffix = "" if ex == "dense" else "_auto"
+                row[f"shards_{s}{suffix}"] = {
+                    "seconds": min(fn().total_seconds
+                                   for _ in range(runs)),
+                    "iterations": warm.iterations,
+                    "n_colors": warm.n_colors,
+                    "mode_trace": warm.mode_trace,
+                    "exchange_trace": warm.exchange_trace,
+                    "bytes_per_iter": list(warm.exchange_bytes),
+                    # iterations whose publication went (at least
+                    # partly) through the packed sparse exchange
+                    "packed_iterations": sum(
+                        c in "bm" for c in warm.exchange_trace),
+                }
         report["graphs"][name] = row
         if not quiet:
             print(csv_row(name, *(f"{row[k]['seconds'] * 1e3:.2f}"
                                   for k in row)))
+    # headline (regress.py gate): geomean over per-ITERATION ratios of
+    # dense-psum bytes vs the auto path's actual ledger, at the largest
+    # shard count — the PR's "exchanged bytes/iteration" claim
+    smax = max(shards)
+    ratios = []
+    for name, row in report["graphs"].items():
+        dense_b = row[f"shards_{smax}"]["bytes_per_iter"]
+        auto_b = row[f"shards_{smax}_auto"]["bytes_per_iter"]
+        ratios += [d / a for d, a in zip(dense_b, auto_b) if a > 0]
+    report["boundary_vs_dense_bytes"] = round(geomean(ratios), 2)
+    if not quiet:
+        print(csv_row(f"GEOMEAN bytes/iter dense vs auto @{smax} shards",
+                      f"{report['boundary_vs_dense_bytes']:.2f}x"))
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=1)

@@ -16,6 +16,8 @@ and THOSE are what this gate compares:
   BENCH_serve.json      best_speedup_batch_ge_8                committed
   BENCH_obs.json        geomean_traced_vs_untraced (LOWER is   committed
                         better: telemetry overhead)
+  BENCH_dist.json       boundary_vs_dense_bytes (bytes/iter    committed
+                        saved by the sparse boundary exchange)
   ====================  =====================================  ==========
 
 A fresh run regresses when its ratio falls below ``(1 - tolerance)`` of
@@ -48,6 +50,7 @@ METRICS: dict[str, tuple[tuple[str, ...], bool]] = {
     "BENCH_stream.json": (("stream_vs_static",), True),
     "BENCH_serve.json": (("best_speedup_batch_ge_8",), True),
     "BENCH_obs.json": (("geomean_traced_vs_untraced",), False),
+    "BENCH_dist.json": (("boundary_vs_dense_bytes",), True),
 }
 
 DEFAULT_TOLERANCE = 0.15

@@ -23,7 +23,14 @@ ap.add_argument("--scale", type=float, default=0.1)
 ap.add_argument("--algo", action="append", choices=algorithm_names(),
                 help="algorithm(s) to run (default: all registered)")
 ap.add_argument("--mode", default="hybrid",
-                help="policy mode (hybrid / topology / data / hybrid-auto)")
+                help="policy mode (hybrid / topology / data / hybrid-auto "
+                     "/ dist-hybrid)")
+ap.add_argument("--shards", type=int, default=None,
+                help="dist modes: shard count (default: all devices)")
+ap.add_argument("--exchange", default="dense",
+                choices=["dense", "boundary", "auto"],
+                help="dist modes: cross-shard color publication path "
+                     "(DESIGN.md §13)")
 ap.add_argument("--outline", action="store_true",
                 help="use the device-resident outlined Pipe")
 ap.add_argument("--layout", default="auto",
@@ -63,7 +70,9 @@ for name in SUITE_SPECS:
         # (launches/iter, timing split, cache hit-rate) at the cost of
         # span bookkeeping; the CSV path stays untraced
         r = session.run(spec_for(mode=args.mode, algo=alg,
-                                 outline=args.outline), g,
+                                 outline=args.outline,
+                                 n_shards=args.shards,
+                                 exchange=args.exchange), g,
                         trace=True if args.json else None)
         # fail loudly: a conflict or uncolored node raises, the script
         # exits non-zero, and no misleading row is printed; reordered
@@ -80,6 +89,14 @@ for name in SUITE_SPECS:
             print(f"{name},{g.layout.kind},{algo},"
                   f"{r.total_seconds * 1e3:.2f},"
                   f"{r.iterations},{r.n_colors}")
+            res = getattr(r, "result", None) or r
+            if getattr(res, "exchange_trace", ""):
+                # dist modes: which publication path each iteration took
+                # ('d' dense, 'b' packed boundary, 'm' mixed) + the
+                # modeled per-device traffic it moved (DESIGN.md §13)
+                kb = sum(res.exchange_bytes) / 1e3
+                print(f"#   exchange[{args.exchange}]: "
+                      f"{res.exchange_trace} ({kb:.1f}KB/device)")
 
 if not args.json:
     print(f"# session cache after sweep: {session.stats.as_dict()}")

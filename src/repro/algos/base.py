@@ -119,9 +119,15 @@ class Algorithm:
 
     # --- distributed -------------------------------------------------------
     def make_dist_steps(self, ig_local: ipgc.IPGCGraph, mesh,
-                        node_axes: tuple, *, window: int, fused: bool):
+                        node_axes: tuple, *, window: int, fused: bool,
+                        exchange: str = "dense", boundary=None,
+                        thresh: int | None = None):
         """(dense_step, sparse_step) shard_map'd closures for
-        ``color_distributed``; only called when ``shard_safe``."""
+        ``color_distributed``; only called when ``shard_safe``.
+        ``exchange``/``boundary``/``thresh`` select the cross-shard color
+        publication path (DESIGN.md §13): with ``exchange != "dense"``
+        the returned steps take per-shard color *views* plus a static
+        ``bcap`` kwarg and return an extra ``xstats`` output."""
         raise NotImplementedError(
             f"algorithm {self.name!r} is not shard-safe: "
             f"{self.shard_unsafe_reason or 'no distributed steps'}")

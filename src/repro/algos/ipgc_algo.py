@@ -34,12 +34,17 @@ class IPGC(Algorithm):
         return ipgc.step_fns(fused)
 
     def make_dist_steps(self, ig_local, mesh, node_axes, *, window: int,
-                        fused: bool):
+                        fused: bool, exchange: str = "dense", boundary=None,
+                        thresh: int | None = None):
         # local import: distributed.py imports the engine (result type)
         from repro.core.distributed import (make_dist_dense_step,
                                             make_dist_sparse_step)
         dense = make_dist_dense_step(ig_local, mesh, node_axes,
-                                     window=window, fused=fused)
+                                     window=window, fused=fused,
+                                     exchange=exchange, boundary=boundary,
+                                     thresh=thresh)
         sparse = make_dist_sparse_step(ig_local, mesh, node_axes,
-                                       window=window, fused=fused)
+                                       window=window, fused=fused,
+                                       exchange=exchange, boundary=boundary,
+                                       thresh=thresh)
         return dense, sparse

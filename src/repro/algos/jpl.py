@@ -73,15 +73,19 @@ def _extrema(npr: jax.Array, impl: str,
     return nbr_max, nbr_min
 
 
-def _hub_extrema(ig: ipgc.IPGCGraph, tpr: jax.Array
-                 ) -> tuple[jax.Array, jax.Array]:
+def _hub_extrema_raw(nh: int, tail_slot: jax.Array, tpr: jax.Array
+                     ) -> tuple[jax.Array, jax.Array]:
     """(n_hub+1,) per-hub-slot tail-priority extrema; row n_hub is the
     neutral row non-hub nodes gather (max -1 / min LARGE)."""
-    nh = ig.n_hub
-    hmax = jnp.full((nh + 1,), -1, jnp.int32).at[ig.tail_slot].max(tpr)
-    hmin = jnp.full((nh + 1,), LARGE).at[ig.tail_slot].min(
+    hmax = jnp.full((nh + 1,), -1, jnp.int32).at[tail_slot].max(tpr)
+    hmin = jnp.full((nh + 1,), LARGE).at[tail_slot].min(
         jnp.where(tpr >= 0, tpr, LARGE))
     return hmax, hmin
+
+
+def _hub_extrema(ig: ipgc.IPGCGraph, tpr: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    return _hub_extrema_raw(ig.n_hub, ig.tail_slot, tpr)
 
 
 def _decide(pend, pr, nbr_max, nbr_min, rnd, cu):
@@ -175,6 +179,170 @@ jpl_dense_step = jax.jit(jpl_dense_step_impl, static_argnames=_JPL_STATICS)
 jpl_sparse_step = jax.jit(jpl_sparse_step_impl, static_argnames=_JPL_STATICS)
 
 
+# ---------------------------------------------------------------------------
+# distributed (shard_map) JPL rounds
+# ---------------------------------------------------------------------------
+#
+# Shard-safety rests on two facts (DESIGN.md §§7+13):
+#   * priorities are OWNER-COMPUTABLE: ``round_hash(global id, round)``
+#     needs no exchange — any shard derives a ghost's priority locally;
+#   * neighbour *activity* is readable from colors: JPL never uncolors,
+#     so the persistent-worklist invariant specialises to
+#     ``mask ≡ (colors == NO_COLOR)`` for every round, making
+#     ``where(colors[nbr] == NO_COLOR, round_hash(nbr, r), -1)`` exactly
+#     the host step's ``pr_ext[nbr]`` (the PAD sentinel at slot n is
+#     PAD_COLOR != NO_COLOR, so pad lanes read -1 — same as pr_ext[n]).
+# A round is single-phase, so each shard_map'd round performs exactly ONE
+# color exchange (the same additive psum — or packed boundary publish —
+# as the ipgc dist steps), and the ``aux`` round counter stays a
+# replicated scalar.
+
+
+def make_jpl_dist_steps(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
+                        *, exchange: str = "dense", boundary=None,
+                        thresh: "int | None" = None):
+    """(dense_round, sparse_round) shard_map'd JPL steps, bit-identical to
+    ``jpl_dense_step``/``jpl_sparse_step`` on the partitioned graph."""
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import (_exchange_colors, _publish_packed,
+                                        _shard_offset)
+
+    n = ig_local.n_nodes
+    nh = ig_local.n_hub
+    na = node_axes
+    bnd = exchange != "dense"
+    isb = jnp.asarray(boundary.is_boundary) if bnd else None
+    th = int(thresh) if bnd else 0
+
+    def _nbr_extrema(colors, rnd, ell_rows):
+        nc = colors[ell_rows]
+        npr = jnp.where(nc == NO_COLOR, round_hash(ell_rows, rnd), -1)
+        return _extrema(npr, "jnp")
+
+    def _hub_arrays(colors, rnd, tail_dst, tail_valid, tail_slot):
+        tc = colors[tail_dst]
+        tpr = jnp.where(tail_valid & (tc == NO_COLOR),
+                        round_hash(tail_dst, rnd), -1)
+        return _hub_extrema_raw(nh, tail_slot, tpr)
+
+    def dense_local(state, rnd, mask_l, isb_l, ell_l, hubslot_l, tail_dst,
+                    tail_valid, tail_slot, *, bcap):
+        idx = _shard_offset(mesh, node_axes)
+        blk = ell_l.shape[0]
+        row_ids = idx * blk + jnp.arange(blk, dtype=jnp.int32)
+        colors = state[0] if bnd else state
+        cu = colors[row_ids]
+        pend = mask_l & (cu == NO_COLOR)
+        pr = jnp.where(pend, round_hash(row_ids, rnd), -1)
+        nbr_max, nbr_min = _nbr_extrema(colors, rnd, ell_l)
+        if nh > 0:
+            hmax, hmin = _hub_arrays(colors, rnd, tail_dst, tail_valid,
+                                     tail_slot)
+            slot = jnp.minimum(hubslot_l, nh)
+            nbr_max = jnp.maximum(nbr_max, hmax[slot])
+            nbr_min = jnp.minimum(nbr_min, hmin[slot])
+        new_c, newly = _decide(pend, pr, nbr_max, nbr_min, rnd, cu)
+        if bnd:
+            colors_out, npk, mx = _publish_packed(
+                colors, row_ids, cu, new_c, isb_l, n=n, node_axes=node_axes,
+                idx=idx, blk=blk, bcap=bcap, thresh=th)
+        else:
+            delta = jnp.zeros((n + 1,), jnp.int32).at[row_ids].set(new_c - cu)
+            colors_out = _exchange_colors(colors, delta, node_axes)
+        still = mask_l & ~newly
+        (items_l,) = jnp.nonzero(still, size=blk, fill_value=blk)
+        items_l = jnp.where(items_l < blk, idx * blk + items_l, n)
+        count = jax.lax.psum(still.sum(dtype=jnp.int32), node_axes)
+        if bnd:
+            xstats = jnp.stack([npk, mx]).astype(jnp.int32)
+            return (colors_out[None], still, items_l.astype(jnp.int32),
+                    count, xstats)
+        return colors_out, still, items_l.astype(jnp.int32), count
+
+    def sparse_local(state, rnd, mask_l, items_l, isb_l, ell_l, hubslot_l,
+                     tail_dst, tail_valid, tail_slot, *, bcap):
+        idx = _shard_offset(mesh, node_axes)
+        blk = ell_l.shape[0]
+        colors = state[0] if bnd else state
+        valid = items_l < n
+        local = jnp.clip(jnp.where(valid, items_l - idx * blk, 0), 0, blk - 1)
+        ids = jnp.where(valid, items_l, n)
+        cu = colors[ids]
+        pend = valid & (cu == NO_COLOR)
+        pr = jnp.where(pend, round_hash(ids, rnd), -1)
+        ell_rows = jnp.where(valid[:, None], ell_l[local], n)
+        nbr_max, nbr_min = _nbr_extrema(colors, rnd, ell_rows)
+        if nh > 0:
+            hmax, hmin = _hub_arrays(colors, rnd, tail_dst, tail_valid,
+                                     tail_slot)
+            slot = jnp.minimum(jnp.where(valid, hubslot_l[local], nh), nh)
+            nbr_max = jnp.maximum(nbr_max, jnp.where(valid, hmax[slot], -1))
+            nbr_min = jnp.minimum(nbr_min,
+                                  jnp.where(valid, hmin[slot], LARGE))
+        new_c, newly = _decide(pend, pr, nbr_max, nbr_min, rnd, cu)
+        if bnd:
+            isb_items = valid & isb_l[local]
+            colors_out, npk, mx = _publish_packed(
+                colors, ids, cu, jnp.where(valid, new_c, cu), isb_items,
+                n=n, node_axes=node_axes, idx=idx, blk=blk, bcap=bcap,
+                thresh=th)
+        else:
+            delta = jnp.zeros((n + 1,), jnp.int32).at[ids].set(
+                jnp.where(valid, new_c - cu, 0))
+            colors_out = _exchange_colors(colors, delta, node_axes)
+        still = pend & ~newly
+        new_items, local_count = compact_items(items_l, still, n)
+        mask2 = mask_l.at[jnp.where(valid, local, blk)].set(still,
+                                                            mode="drop")
+        count = jax.lax.psum(local_count, node_axes)
+        if bnd:
+            xstats = jnp.stack([npk, mx]).astype(jnp.int32)
+            return colors_out[None], mask2, new_items, count, xstats
+        return colors_out, mask2, new_items, count
+
+    cspec = P(na, None) if bnd else P()
+    dense_in = (cspec, P(), P(na), P(na), P(na, None), P(na),
+                P(), P(), P())
+    sparse_in = (cspec, P(), P(na), P(na), P(na), P(na, None), P(na),
+                 P(), P(), P())
+    out = (cspec, P(na), P(na), P())
+    if bnd:
+        out = out + (P(),)
+
+    def _wrap(local_fn, in_specs, sparse: bool):
+        def run(colors, rnd, wl: Worklist, *, bcap: int):
+            fn = shard_map(partial(local_fn, bcap=bcap), mesh=mesh,
+                           in_specs=in_specs, out_specs=out,
+                           check_rep=False)
+            args = (colors, rnd, wl.mask) + ((wl.items,) if sparse else ())
+            outs = fn(*args, isb if bnd else jnp.zeros((n,), bool),
+                      ig_local.ell_idx, ig_local.hub_slot,
+                      ig_local.tail_dst, ig_local.tail_valid,
+                      ig_local.tail_slot)
+            colors2, mask, items, count = outs[:4]
+            wl2 = Worklist(mask=mask, items=items, count=count)
+            if bnd:
+                return colors2, rnd + 1, wl2, outs[4]
+            return colors2, rnd + 1, wl2
+
+        if bnd:
+            step = jax.jit(run, static_argnames=("bcap",))
+        else:
+            jitted = jax.jit(lambda c, r, w: run(c, r, w, bcap=0))
+
+            def step(colors, rnd, wl):
+                return jitted(colors, rnd, wl)
+        step.exchanges_per_iter = 1    # a JPL round is single-phase
+        return step
+
+    return (_wrap(dense_local, dense_in, sparse=False),
+            _wrap(sparse_local, sparse_in, sparse=True))
+
+
 @dataclasses.dataclass(frozen=True)
 class JPL(Algorithm):
     name: str = "jpl"
@@ -183,12 +351,11 @@ class JPL(Algorithm):
     #: JPL is mode-invariant (no speculation), so dense-only lanes match
     #: the host loop's per-iteration mode choice bit-exactly
     batch_safe: bool = True
-    shard_safe: bool = False
-    shard_unsafe_reason: str = (
-        "independent-set extraction needs neighbour *activity*, which only "
-        "the colors vector carries across shards; a shard-local round would "
-        "need a second replicated activity exchange per round — not yet "
-        "implemented (the declaration contract, DESIGN.md §7)")
+    #: shard-safe because a round's priorities are owner-computable
+    #: (``round_hash(global id, round)``) and neighbour activity is
+    #: readable from the exchanged colors vector — see the
+    #: ``make_jpl_dist_steps`` header comment for the invariant proof
+    shard_safe: bool = True
     uses_window: bool = False
 
     def init_state(self, ig):
@@ -205,6 +372,15 @@ class JPL(Algorithm):
 
     def resolve_fused(self, fused, *, default):
         return False                      # single step family
+
+    def make_dist_steps(self, ig_local, mesh, node_axes, *, window: int,
+                        fused: bool, exchange: str = "dense", boundary=None,
+                        thresh: int | None = None):
+        # window/fused are protocol arguments JPL ignores (no mex window,
+        # single step family) — same contract as the host steps
+        return make_jpl_dist_steps(ig_local, mesh, node_axes,
+                                   exchange=exchange, boundary=boundary,
+                                   thresh=thresh)
 
     def finalize(self, colors):
         return _compact_palette(colors)

@@ -57,13 +57,18 @@ class SpecGreedy(Algorithm):
         return True                       # deferred repair IS the algorithm
 
     def make_dist_steps(self, ig_local, mesh, node_axes, *, window: int,
-                        fused: bool):
+                        fused: bool, exchange: str = "dense", boundary=None,
+                        thresh: int | None = None):
         from repro.core.distributed import (make_dist_dense_step,
                                             make_dist_sparse_step)
         dense = make_dist_dense_step(ig_local, mesh, node_axes,
-                                     window=window, fused=True)
+                                     window=window, fused=True,
+                                     exchange=exchange, boundary=boundary,
+                                     thresh=thresh)
         sparse = make_dist_sparse_step(ig_local, mesh, node_axes,
-                                       window=window, fused=True)
+                                       window=window, fused=True,
+                                       exchange=exchange, boundary=boundary,
+                                       thresh=thresh)
         return dense, sparse
 
     def finalize(self, colors):

@@ -29,6 +29,15 @@ shard count; the fused steps are bit-identical to ``ipgc.fused_*_step``
 (so ``color_distributed`` reproduces ``engine.color(fused=True)``'s
 colors, iteration count and mode trace for fixed-H policies —
 DESIGN.md §6).
+
+``exchange="boundary"|"auto"`` (DESIGN.md §13) replaces the full-vector
+psum with a packed publish of only *changed boundary* vertices — the
+paper's dense/sparse hybridization applied to the communication axis
+(Bogle & Slota, arXiv 2107.00075). Color state becomes per-shard views
+(correct at owned + ghost ids); ``_publish_packed`` switches on-device
+between the packed buffers and a dense owner-block swap, so correctness
+never depends on the boundary-buffer capacity guess. Every combination
+stays bit-identical to the host engine (tests/test_boundary.py).
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -47,15 +57,19 @@ from repro.graphs.csr import Graph, NO_COLOR
 from repro.obs.metrics import default_registry
 
 # --- exchange instrumentation (trace-time) ---------------------------------
-# Every color-vector exchange goes through ``_exchange_colors`` so tests can
-# assert the communication volume per step: one psum'd int32[N+1] delta per
-# fused iteration, two per two-phase iteration. Counters increment at trace
-# time (à la ipgc.GATHER_COUNTS) — inspect by tracing a step with
-# ``jax.eval_shape`` inside an ``EXCHANGE_COUNTS.scope()`` block. The
-# group is a reset-scoped ``CounterGroup`` in the obs default registry
-# (DESIGN.md §12); scopes zero on entry and restore outer values on exit.
-EXCHANGE_COUNTS = default_registry().group("dist.exchanges",
-                                           ("color_psum",))
+# Every color-vector exchange goes through ``_exchange_colors`` or
+# ``_publish_packed`` so tests can assert the communication volume per
+# step: one exchange per fused iteration, two per two-phase iteration.
+# Counters increment at trace time (à la ipgc.GATHER_COUNTS) — inspect by
+# tracing a step with ``jax.eval_shape`` inside an
+# ``EXCHANGE_COUNTS.scope()`` block. Keys: ``color_psum`` (dense additive
+# all-gather, the exchange="dense" path), ``boundary_pack`` /
+# ``dense_swap`` (the two branches of a packed publish — BOTH trace per
+# publish, the runtime picks one on-device). The group is a reset-scoped
+# ``CounterGroup`` in the obs default registry (DESIGN.md §12); scopes
+# zero on entry and restore outer values on exit.
+EXCHANGE_COUNTS = default_registry().group(
+    "dist.exchanges", ("color_psum", "boundary_pack", "dense_swap"))
 
 
 def reset_exchange_counts() -> None:
@@ -69,6 +83,87 @@ def _exchange_colors(colors: jax.Array, delta: jax.Array,
     dense delta against the replicated vector, so a psum IS the gather."""
     EXCHANGE_COUNTS["color_psum"] += 1
     return colors + jax.lax.psum(delta, node_axes)
+
+
+def _publish_packed(view, ids, old, vals, is_bnd, *, n: int, node_axes,
+                    idx, blk: int, bcap: int, thresh: int):
+    """Publish owned color updates into a per-shard color *view*.
+
+    ``view`` is this shard's int32[n+1] color vector (correct at owned +
+    ghost ids, possibly stale elsewhere — DESIGN.md §13); ``ids`` are the
+    owned global ids being written (pad lanes carry id >= n), ``old`` the
+    colors those ids currently hold in the view, ``vals`` the new colors.
+
+    Owned writes always land locally. Cross-shard publication then picks
+    ON-DEVICE between:
+      * packed: all-gather only the ``(id, color)`` pairs of *changed
+        boundary* vertices, compacted into a static int32[bcap] buffer
+        (8·bcap·S bytes) and scatter-unpacked (pad id n+1 is out of
+        bounds for int32[n+1] → dropped, protecting the PAD_COLOR
+        sentinel at slot n);
+      * dense swap: all-gather the full owner blocks (~4n bytes) — the
+        correctness fallback when any shard's changed-boundary count
+        overflows ``bcap`` OR the global changed-boundary total exceeds
+        the policy ``thresh``, so correctness never depends on the
+        capacity guess.
+    The predicate is replicated (computed from an all-gather of every
+    shard's changed count) so every shard takes the same branch —
+    collectives under ``lax.cond`` stay in lockstep.
+
+    Returns ``(view', n_packed, max_changed)`` with the two stats
+    replicated int32 scalars: how many of this iteration's publishes went
+    packed (0/1 here; the driver sums across the step's publishes) and
+    the largest per-shard changed-boundary count (feeds the driver's
+    next-bucket prediction).
+    """
+    ids = ids.astype(jnp.int32)
+    vals = vals.astype(jnp.int32)
+    valid = ids < n
+    # own writes are always local (drop pad lanes)
+    view = view.at[jnp.where(valid, ids, n + 1)].set(vals, mode="drop")
+    changed = valid & is_bnd & (vals != old)
+    local_cb = changed.sum(dtype=jnp.int32)
+    # one scalar all-gather feeds BOTH gate reductions (max + sum) —
+    # on-wire collective COUNT matters as much as payload bytes, so the
+    # gate costs one rendezvous, not two
+    counts = jax.lax.all_gather(local_cb, node_axes)
+    biggest = jnp.max(counts)
+    total = jnp.sum(counts, dtype=jnp.int32)
+    use_packed = (biggest <= bcap) & (total <= thresh)
+    m = ids.shape[0]
+
+    def packed(v):
+        EXCHANGE_COUNTS["boundary_pack"] += 1
+        (pos,) = jnp.nonzero(changed, size=bcap, fill_value=m)
+        ids_ext = jnp.concatenate(
+            [ids, jnp.full((1,), n + 1, jnp.int32)])
+        vals_ext = jnp.concatenate([vals, jnp.zeros((1,), jnp.int32)])
+        # ids and colors ride ONE all-gather as a fused (2*bcap,) buffer:
+        # same 8*bcap bytes per shard, half the collectives
+        payload = jnp.concatenate([ids_ext[pos], vals_ext[pos]])
+        allp = jax.lax.all_gather(payload, node_axes)
+        allp = allp.reshape(-1, 2 * bcap)
+        pids = allp[:, :bcap].reshape(-1)
+        pvals = allp[:, bcap:].reshape(-1)
+        return v.at[pids].set(pvals, mode="drop")
+
+    def dense_swap(v):
+        EXCHANGE_COUNTS["dense_swap"] += 1
+        own = jax.lax.dynamic_slice(v, (idx * blk,), (blk,))
+        return v.at[:n].set(jax.lax.all_gather(own, node_axes, tiled=True))
+
+    view = jax.lax.cond(use_packed, packed, dense_swap, view)
+    return view, use_packed.astype(jnp.int32), biggest
+
+
+def views_to_colors(views, n_shards: int, n: int):
+    """Host-side finalize for the boundary-exchange paths: per-shard views
+    only agree at owned + ghost ids, so the true int32[n] color vector is
+    the concatenation of each shard's OWN block of its OWN view."""
+    v = np.asarray(views)
+    block = n // n_shards
+    return np.concatenate(
+        [v[s, s * block:(s + 1) * block] for s in range(n_shards)])
 
 
 def _shard_offset(mesh, node_axes: tuple):
@@ -98,7 +193,8 @@ def _local_graph_view(ig_local: ipgc.IPGCGraph, n: int, ell_l, deg_l,
 
 def make_dist_dense_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
                          *, window: int = 128, n_global: int | None = None,
-                         fused: bool = False):
+                         fused: bool = False, exchange: str = "dense",
+                         boundary=None, thresh: int | None = None):
     """Build a shard_map'd dense step.
 
     ig_local: the IPGCGraph whose per-shard row blocks will be fed in
@@ -112,8 +208,24 @@ def make_dist_dense_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
     ``ipgc.dense_step``, two color exchanges per iteration);
     ``fused=True`` pipelines resolve-of-last-round with assign
     (bit-identical to ``ipgc.fused_dense_step``, ONE exchange).
+
+    ``exchange != "dense"`` switches the color state from one replicated
+    int32[N+1] vector to per-shard *views* of shape (S, N+1) — sharded
+    ``P(node_axes, None)`` — published through ``_publish_packed``
+    instead of the additive psum. The returned step then has signature
+    ``step(views, base, wl, *, bcap)`` (``bcap`` static, retraced per
+    boundary-buffer rung) and returns an extra replicated int32[2]
+    ``xstats = [n_packed_publishes, max_changed_boundary]`` for the
+    driver's byte ledger and bucket prediction. ``boundary`` is the
+    partition-time ``BoundaryInfo``; ``thresh`` the static changed-count
+    threshold from ``policy.exchange_threshold``.
     """
     n = n_global or ig_local.n_nodes
+
+    if exchange != "dense":
+        return _make_dense_boundary_step(
+            ig_local, mesh, node_axes, n=n, window=window, fused=fused,
+            boundary=boundary, thresh=thresh)
 
     def local_step(colors, base_l, mask_l, ell_l, deg_l, hubslot_l,
                    prio, tail_src, tail_dst, tail_valid, tail_slot, hub_ids):
@@ -206,6 +318,111 @@ def make_dist_dense_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
             ig_local.hub_ids)
         return colors3, base2, Worklist(mask=mask, items=items, count=count)
 
+    step.exchanges_per_iter = 1 if fused else 2
+    return step
+
+
+def _make_dense_boundary_step(ig_local: ipgc.IPGCGraph, mesh,
+                              node_axes: tuple, *, n: int, window: int,
+                              fused: bool, boundary, thresh: int):
+    """View-state variant of the dense step (see make_dist_dense_step)."""
+    isb = jnp.asarray(boundary.is_boundary)
+    th = int(thresh)
+    na = node_axes
+
+    def local_step(views_l, base_l, mask_l, isb_l, ell_l, deg_l, hubslot_l,
+                   prio, tail_src, tail_dst, tail_valid, tail_slot,
+                   hub_ids, *, bcap):
+        idx = _shard_offset(mesh, node_axes)
+        blk = ell_l.shape[0]
+        row_ids = idx * blk + jnp.arange(blk, dtype=jnp.int32)
+        colors = views_l[0]             # this shard's (n+1,) view
+        ig = _local_graph_view(ig_local, n, ell_l, deg_l, hubslot_l, prio,
+                               tail_src, tail_dst, tail_valid, tail_slot,
+                               hub_ids)
+        active = mask_l
+        nc = colors[ell_l]
+        slot_c = jnp.minimum(hubslot_l, ig_local.n_hub)
+        pub = partial(_publish_packed, n=n, node_axes=node_axes, idx=idx,
+                      blk=blk, bcap=bcap, thresh=th)
+
+        if fused:
+            cu = colors[row_ids]
+            pu = prio[row_ids]
+            pending = active & (cu >= 0)
+            npr = prio[ell_l]
+            if ig_local.n_hub > 0:
+                base_pad = jnp.zeros((n,), jnp.int32).at[row_ids].set(base_l)
+                extra = ipgc._hub_forbidden(ig, colors, base_pad,
+                                            window)[slot_c]
+                pending_full = jnp.zeros((n + 1,), bool).at[row_ids].set(
+                    pending)
+                hub_lose = ipgc._hub_lose(ig, colors, pending_full)[slot_c]
+            else:
+                extra = None
+                hub_lose = None
+            lose, first, has = ipgc._fused_rows(
+                ig, nc, npr, ell_l, base_l, cu, pu, row_ids, pending, extra,
+                window, "jnp")
+            if hub_lose is not None:
+                lose = lose | (hub_lose & pending)
+            need = lose | (active & (cu < 0))
+            new_c = jnp.where(need & has, base_l + first,
+                              jnp.where(lose, NO_COLOR, cu))
+            new_base = jnp.where(need & ~has, base_l + window, base_l)
+            colors_out, npk, mx = pub(colors, row_ids, cu, new_c, isb_l)
+            still = need
+        else:
+            # --- assign ---
+            cu0 = colors[row_ids]
+            if ig_local.n_hub > 0:
+                base_pad = jnp.zeros((n,), jnp.int32).at[row_ids].set(base_l)
+                hub_forb = ipgc._hub_forbidden(ig, colors, base_pad, window)
+                extra = hub_forb[slot_c]
+            else:
+                extra = None
+            new_c, new_base, newly = ipgc._mex_rows(
+                ig, nc, base_l, active, cu0, extra, window, "jnp")
+            colors2, npk1, b1 = pub(colors, row_ids, cu0,
+                                    jnp.where(active, new_c, cu0), isb_l)
+            # --- resolve ---
+            lose = ipgc._lose_rows(ig, ell_l, row_ids, colors2, newly, "jnp")
+            if ig_local.n_hub > 0:
+                newly_g = jnp.zeros((n + 1,), bool).at[row_ids].set(newly)
+                hub_l = ipgc._hub_lose(ig, colors2, newly_g)
+                lose = lose | hub_l[slot_c]
+            c2r = colors2[row_ids]
+            colors_out, npk2, b2 = pub(colors2, row_ids, c2r,
+                                       jnp.where(lose, NO_COLOR, c2r), isb_l)
+            still = lose | (active & ~newly)
+            npk = npk1 + npk2
+            mx = jnp.maximum(b1, b2)
+
+        (items_l,) = jnp.nonzero(still, size=blk, fill_value=blk)
+        items_l = jnp.where(items_l < blk, idx * blk + items_l, n)
+        count = jax.lax.psum(still.sum(dtype=jnp.int32), node_axes)
+        xstats = jnp.stack([npk, mx]).astype(jnp.int32)
+        return (colors_out[None], new_base, still, items_l.astype(jnp.int32),
+                count, xstats)
+
+    in_specs = (P(na, None), P(na), P(na), P(na), P(na, None), P(na), P(na),
+                P(), P(), P(), P(), P(), P())
+    out_specs = (P(na, None), P(na), P(na), P(na), P(), P())
+
+    @partial(jax.jit, static_argnames=("bcap",))
+    def step(views, base, wl: Worklist, *, bcap: int):
+        fn = shard_map(partial(local_step, bcap=bcap), mesh=mesh,
+                       in_specs=in_specs, out_specs=out_specs,
+                       check_rep=False)
+        views2, base2, mask, items, count, xstats = fn(
+            views, base, wl.mask, isb, ig_local.ell_idx, ig_local.degrees,
+            ig_local.hub_slot, ig_local.priority, ig_local.tail_src,
+            ig_local.tail_dst, ig_local.tail_valid, ig_local.tail_slot,
+            ig_local.hub_ids)
+        return (views2, base2, Worklist(mask=mask, items=items, count=count),
+                xstats)
+
+    step.exchanges_per_iter = 1 if fused else 2
     return step
 
 
@@ -215,7 +432,8 @@ def make_dist_dense_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
 
 def make_dist_sparse_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
                           *, window: int = 128, n_global: int | None = None,
-                          fused: bool = False):
+                          fused: bool = False, exchange: str = "dense",
+                          boundary=None, thresh: int | None = None):
     """Build a shard_map'd data-driven step over shard-local worklists.
 
     Each shard gathers only its own compacted items block (global node ids
@@ -226,8 +444,17 @@ def make_dist_sparse_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
     shard-local. The returned ``step(colors, base, wl)`` expects
     ``wl.items`` of global shape ``n_shards * C`` (per-shard blocks) and
     retraces per capacity bucket, exactly like the host engine.
+
+    ``exchange != "dense"``: view-state + packed-publish variant, same
+    contract as ``make_dist_dense_step`` (extra static ``bcap`` kwarg,
+    extra ``xstats`` output).
     """
     n = n_global or ig_local.n_nodes
+
+    if exchange != "dense":
+        return _make_sparse_boundary_step(
+            ig_local, mesh, node_axes, n=n, window=window, fused=fused,
+            boundary=boundary, thresh=thresh)
 
     def local_step(colors, base_l, mask_l, items_l, ell_l, deg_l, hubslot_l,
                    prio, tail_src, tail_dst, tail_valid, tail_slot, hub_ids):
@@ -326,6 +553,120 @@ def make_dist_sparse_step(ig_local: ipgc.IPGCGraph, mesh, node_axes: tuple,
             ig_local.tail_slot, ig_local.hub_ids)
         return colors3, base2, Worklist(mask=mask, items=items, count=count)
 
+    step.exchanges_per_iter = 1 if fused else 2
+    return step
+
+
+def _make_sparse_boundary_step(ig_local: ipgc.IPGCGraph, mesh,
+                               node_axes: tuple, *, n: int, window: int,
+                               fused: bool, boundary, thresh: int):
+    """View-state variant of the sparse step (see make_dist_sparse_step)."""
+    isb = jnp.asarray(boundary.is_boundary)
+    th = int(thresh)
+    na = node_axes
+
+    def local_step(views_l, base_l, mask_l, items_l, isb_l, ell_l, deg_l,
+                   hubslot_l, prio, tail_src, tail_dst, tail_valid,
+                   tail_slot, hub_ids, *, bcap):
+        idx = _shard_offset(mesh, node_axes)
+        blk = ell_l.shape[0]
+        row_ids = idx * blk + jnp.arange(blk, dtype=jnp.int32)
+        colors = views_l[0]
+        ig = _local_graph_view(ig_local, n, ell_l, deg_l, hubslot_l, prio,
+                               tail_src, tail_dst, tail_valid, tail_slot,
+                               hub_ids)
+        valid = items_l < n
+        local = jnp.clip(jnp.where(valid, items_l - idx * blk, 0), 0, blk - 1)
+        ids = jnp.where(valid, items_l, n)
+        isb_items = valid & isb_l[local]
+        ell_rows = jnp.where(valid[:, None], ell_l[local], n)
+        nc = colors[ell_rows]
+        base_rows = base_l[local]
+        cu = colors[ids]
+        pub = partial(_publish_packed, n=n, node_axes=node_axes, idx=idx,
+                      blk=blk, bcap=bcap, thresh=th)
+        if ig_local.n_hub > 0:
+            base_pad = jnp.zeros((n,), jnp.int32).at[row_ids].set(base_l)
+            hub_forb = ipgc._hub_forbidden(ig, colors, base_pad, window)
+            slot_c = jnp.minimum(jnp.where(valid, hubslot_l[local],
+                                           ig_local.n_hub), ig_local.n_hub)
+            extra = hub_forb[slot_c]
+        else:
+            slot_c = None
+            extra = None
+
+        if fused:
+            pu = prio[ids]
+            npr = prio[ell_rows]
+            pending = valid & (cu >= 0)
+            if ig_local.n_hub > 0:
+                pending_full = jnp.zeros((n + 1,), bool).at[
+                    jnp.where(pending, items_l, n)].set(pending, mode="drop")
+                hub_lose = (ipgc._hub_lose(ig, colors, pending_full)[slot_c]
+                            & valid)
+            else:
+                hub_lose = None
+            lose, first, has = ipgc._fused_rows(
+                ig, nc, npr, ell_rows, base_rows, cu, pu, ids, pending,
+                extra, window, "jnp")
+            if hub_lose is not None:
+                lose = lose | (hub_lose & pending)
+            need = lose | (valid & (cu < 0))
+            new_c = jnp.where(need & has, base_rows + first,
+                              jnp.where(lose, NO_COLOR, cu))
+            new_base_rows = jnp.where(need & ~has, base_rows + window,
+                                      base_rows)
+            colors_out, npk, mx = pub(colors, ids, cu,
+                                      jnp.where(valid, new_c, cu), isb_items)
+            still = need
+        else:
+            # --- assign ---
+            new_c, new_base_rows, newly = ipgc._mex_rows(
+                ig, nc, base_rows, valid, cu, extra, window, "jnp")
+            colors2, npk1, b1 = pub(colors, ids, cu,
+                                    jnp.where(valid, new_c, cu), isb_items)
+            # --- resolve ---
+            lose = ipgc._lose_rows(ig, ell_rows, ids, colors2, newly, "jnp")
+            if ig_local.n_hub > 0:
+                newly_full = jnp.zeros((n + 1,), bool).at[
+                    jnp.where(newly, items_l, n)].set(newly, mode="drop")
+                hub_l = ipgc._hub_lose(ig, colors2, newly_full)
+                lose = lose | (hub_l[slot_c] & valid)
+            c2 = colors2[ids]
+            colors_out, npk2, b2 = pub(colors2, ids, c2,
+                                       jnp.where(lose, NO_COLOR, c2),
+                                       isb_items)
+            still = lose | (valid & ~newly)
+            npk = npk1 + npk2
+            mx = jnp.maximum(b1, b2)
+
+        new_items, local_count = compact_items(items_l, still, n)
+        mask2 = mask_l.at[jnp.where(valid, local, blk)].set(still,
+                                                            mode="drop")
+        base2 = base_l.at[jnp.where(valid, local, blk)].set(new_base_rows,
+                                                            mode="drop")
+        count = jax.lax.psum(local_count, node_axes)
+        xstats = jnp.stack([npk, mx]).astype(jnp.int32)
+        return colors_out[None], base2, mask2, new_items, count, xstats
+
+    in_specs = (P(na, None), P(na), P(na), P(na), P(na), P(na, None), P(na),
+                P(na), P(), P(), P(), P(), P(), P())
+    out_specs = (P(na, None), P(na), P(na), P(na), P(), P())
+
+    @partial(jax.jit, static_argnames=("bcap",))
+    def step(views, base, wl: Worklist, *, bcap: int):
+        fn = shard_map(partial(local_step, bcap=bcap), mesh=mesh,
+                       in_specs=in_specs, out_specs=out_specs,
+                       check_rep=False)
+        views2, base2, mask, items, count, xstats = fn(
+            views, base, wl.mask, wl.items, isb, ig_local.ell_idx,
+            ig_local.degrees, ig_local.hub_slot, ig_local.priority,
+            ig_local.tail_src, ig_local.tail_dst, ig_local.tail_valid,
+            ig_local.tail_slot, ig_local.hub_ids)
+        return (views2, base2, Worklist(mask=mask, items=items, count=count),
+                xstats)
+
+    step.exchanges_per_iter = 1 if fused else 2
     return step
 
 
@@ -370,6 +711,7 @@ def color_distributed(
     balance: bool = True,
     steps_cache: dict | None = None,
     layout: "str | object | None" = None,
+    exchange: str = "dense",
 ) -> ColoringResult:
     """Sharded hybrid Pipe: the host-loop driver over the shard_map steps.
 
@@ -398,6 +740,12 @@ def color_distributed(
     the sharded steps are the ELL-family tile steps, so ``csr-segment``
     execution is rejected — pass ``layout="ell-tail"`` to run a
     csr-segment-planned graph here (its ELL+tail arrays are complete).
+    ``exchange``: cross-shard color publication path (DESIGN.md §13) —
+    ``"dense"`` (additive psum of int32[N+1], the historical path),
+    ``"boundary"`` (packed changed-boundary buffers whenever they fit),
+    or ``"auto"`` (packed only below the byte break-even threshold).
+    Static knob: it rides the compile-cache key. All three are
+    bit-identical (tests/test_boundary.py).
     """
     # thin dispatcher over the unified session (driver loop + cache live
     # in repro.exec.session; lazy import — repro.exec imports this module)
@@ -405,7 +753,8 @@ def color_distributed(
     spec = ExecutionSpec(
         regime="dist", mode=mode, algo=algo, layout=layout, h=h,
         window=window, bucket_ratio=bucket_ratio, max_iter=max_iter,
-        priority=priority, fused=fused, n_shards=n_shards, balance=balance)
+        priority=priority, fused=fused, n_shards=n_shards, balance=balance,
+        exchange=exchange)
     session = (default_session() if steps_cache is None
                else Session(cache=steps_cache))
     return session.run(spec, g, policy=policy, collect_tti=collect_tti,

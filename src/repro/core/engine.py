@@ -96,6 +96,11 @@ class ColoringResult:
     tti: list[float]            # wall seconds, same granularity as counts
     total_seconds: float
     host_dispatches: int = 0    # device-program launches the host issued
+    # dist regime only (DESIGN.md §13): per-iteration exchange-path trace
+    # ('d' dense, 'b' packed-boundary, 'm' mixed within a two-phase
+    # iteration) and the modeled bytes each iteration moved per device
+    exchange_trace: str = ""
+    exchange_bytes: list = dataclasses.field(default_factory=list)
 
 
 def resolve_plan(g, layout):
@@ -159,6 +164,8 @@ def color(
     #                               False, outlined per backend, dist True)
     outline: bool | None = None,  # None -> set_outline_default()/env default
     n_shards: int | None = None,  # dist-* modes: shard count (None = all)
+    exchange: str = "dense",      # dist-* modes: color publication path —
+    #                               "dense" | "boundary" | "auto" (§13)
     layout: "str | object | None" = None,  # LayoutPlan / kind; None = g's plan
     tile_rows: "int | str | None" = "auto",  # Pallas row-tile height; "auto"
     #                               consults the persistent tuner
@@ -175,7 +182,8 @@ def color(
     spec = spec_for(mode=mode, algo=algo, h=h, window=window, impl=impl,
                     bucket_ratio=bucket_ratio, max_iter=max_iter,
                     priority=priority, fused=fused, outline=outline,
-                    n_shards=n_shards, layout=layout, tile_rows=tile_rows)
+                    n_shards=n_shards, layout=layout, tile_rows=tile_rows,
+                    exchange=exchange)
     return default_session().run(spec, g, policy=policy,
                                  collect_tti=collect_tti, trace=trace)
 

@@ -140,6 +140,38 @@ class AutoTuned:
 
 
 # ---------------------------------------------------------------------------
+# exchange policy — the dense/sparse switch on the COMMUNICATION axis
+# ---------------------------------------------------------------------------
+
+
+EXCHANGES = ("dense", "boundary", "auto")
+
+
+def exchange_threshold(n: int, n_shards: int, exchange: str) -> int:
+    """Static changed-boundary-count threshold for the distributed packed
+    publish (DESIGN.md §13): the on-device switch goes packed when the
+    global changed-boundary total is ``<= threshold`` AND every shard's
+    share fits the static buffer capacity.
+
+    ``"boundary"`` pins the threshold at ``n + 1`` — packed whenever it
+    fits, the always-sparse degenerate of the communication axis.
+    ``"auto"`` is the byte break-even rule: a packed publish moves
+    ``8 * cap * S`` bytes vs the dense path's ``~4n``, so packing pays
+    only while the changed total stays under ``(n+1) / (2S)`` — the same
+    worklist-size-driven hybridization the paper applies to compute,
+    pointed at communication. (``"dense"`` never consults a threshold;
+    returned as -1 for uniformity.)
+    """
+    if exchange == "dense":
+        return -1
+    if exchange == "boundary":
+        return n + 1
+    if exchange == "auto":
+        return max(8, (n + 1) // (2 * max(n_shards, 1)))
+    raise ValueError(f"unknown exchange {exchange!r}; valid: {EXCHANGES}")
+
+
+# ---------------------------------------------------------------------------
 # chunk-size policies — the REFILL cadence of the streaming service
 # ---------------------------------------------------------------------------
 #

@@ -48,14 +48,17 @@ from repro.core import ipgc
 from repro.core.engine import (ColoringResult, adaptive_window,
                                resolve_plan)
 from repro.core.policy import (AutoTuned, Policy, Timer, device_threshold,
-                               make_policy, measure_launches)
+                               exchange_threshold, make_policy,
+                               measure_launches)
 from repro.core.worklist import (bucket_capacities, chunk_lower_bounds,
                                  pick_bucket, resize_items)
 from repro.exec.spec import ExecutionSpec
 from repro.graphs.csr import Graph
 from repro.kernels.tune import resolve_tile_rows
 from repro.obs import trace as obs_trace
-from repro.obs.report import RunReport, exchange_section, totals_from_trace
+from repro.obs.report import (RunReport, dense_exchange_bytes,
+                              dense_swap_bytes, exchange_section,
+                              packed_exchange_bytes, totals_from_trace)
 
 
 @dataclasses.dataclass
@@ -370,14 +373,26 @@ class Session:
         def build():
             dense_fn, sparse_fn = s["alg"].make_dist_steps(
                 ig, s["mesh"], s["node_axes"], window=s["window"],
-                fused=s["fused"])
+                fused=s["fused"], exchange=s["exchange"],
+                boundary=s["binfo"], thresh=s["thresh"])
             colors, base, wl = s["alg"].init_state(ig)
+            bnd = s["exchange"] != "dense"
+            if bnd:
+                colors = jnp.broadcast_to(colors,
+                                          (s["n_shards"],) + colors.shape)
+                bcap0 = s["binfo"].capacities[0]
             out = {}
             for mode, fn in (("dense", dense_fn), ("sparse", sparse_fn)):
                 with ipgc.LAUNCH_COUNTS.scope() as lc, \
                         ipgc.GATHER_COUNTS.scope() as gc, \
                         distributed.EXCHANGE_COUNTS.scope() as ec:
-                    jax.eval_shape(fn, colors, base, wl)
+                    if bnd:
+                        # eval_shape can't carry the static int kwarg
+                        jax.eval_shape(lambda c, b, w: fn(c, b, w,
+                                                          bcap=bcap0),
+                                       colors, base, wl)
+                    else:
+                        jax.eval_shape(fn, colors, base, wl)
                     out[mode] = {"launches": lc.as_dict(),
                                  "gathers": gc.as_dict(),
                                  "exchanges": ec.as_dict()}
@@ -402,14 +417,17 @@ class Session:
 
         exchanges = None
         if spec.regime == "dist" and profile:
-            per_iter = {m: profile[m]["exchanges"]["color_psum"]
-                        for m in profile}
-            # the psum'd delta is int32[n+1] over the PARTITIONED node
-            # count (prepare_partition pads n to a multiple of the shard
+            per_iter = {m: {k: v for k, v in profile[m]["exchanges"].items()
+                            if v} for m in profile}
+            # byte formulas run over the PARTITIONED node count
+            # (prepare_partition pads n to a multiple of the shard
             # count), not the caller's original n_nodes
-            exchanges = exchange_section(per_iter,
-                                         meter.statics["ig"].n_nodes,
-                                         result.mode_trace)
+            exchanges = exchange_section(
+                per_iter, meter.statics["ig"].n_nodes, result.mode_trace,
+                exchange=meter.statics.get("exchange", "dense"),
+                n_shards=meter.statics.get("n_shards", 1),
+                exchange_trace=result.exchange_trace,
+                exchange_bytes=result.exchange_bytes)
         alg = spec.resolved_algo()
         return RunReport(
             regime=spec.regime, algo=alg.name, graph=self._graph_name(g),
@@ -603,8 +621,8 @@ class Session:
 
     def _run_dist(self, spec: ExecutionSpec, g, *, policy, collect_tti,
                   mesh, node_axes, meter=None) -> ColoringResult:
-        from repro.core.distributed import make_dist_resize
-        from repro.graphs.partition import prepare_partition
+        from repro.core.distributed import make_dist_resize, views_to_colors
+        from repro.graphs.partition import boundary_info, prepare_partition
         alg = spec.resolved_algo()
         if not alg.shard_safe:
             raise ValueError(
@@ -636,7 +654,8 @@ class Session:
         # partitioned graph and jitted shard_map steps.
         key = ("dist", g.name, g.n_nodes, g.n_edges, n_shards, node_axes,
                spec.window, spec.priority, fused, spec.balance, alg, plan,
-               spec.tile_rows, id(mesh) if custom_mesh else None)
+               spec.tile_rows, spec.exchange,
+               id(mesh) if custom_mesh else None)
 
         def build():
             g2, new_of_old = prepare_partition(g, n_shards,
@@ -646,26 +665,44 @@ class Session:
             else:
                 window = spec.window
             ig = alg.prepare(g2, priority=spec.priority, plan=plan)
+            binfo = thresh = None
+            if spec.exchange != "dense":
+                binfo = boundary_info(g2, n_shards)
+                thresh = exchange_threshold(ig.n_nodes, n_shards,
+                                            spec.exchange)
             dense_fn, sparse_fn = alg.make_dist_steps(
-                ig, mesh, node_axes, window=window, fused=fused)
+                ig, mesh, node_axes, window=window, fused=fused,
+                exchange=spec.exchange, boundary=binfo, thresh=thresh)
             resize_fn = make_dist_resize(mesh, node_axes, ig.n_nodes)
             return (g, g2, new_of_old, ig, window, dense_fn, sparse_fn,
-                    resize_fn)
+                    resize_fn, binfo, thresh)
 
         with obs_trace.maybe_span("session.prepare"):
             (_, g2, new_of_old, ig, window, dense_fn, sparse_fn,
-             resize_fn) = self.cached(key, build)
+             resize_fn, binfo, thresh) = self.cached(key, build)
         n = ig.n_nodes
         if meter is not None:
             meter.statics = dict(kind="dist", alg=alg, ig=ig, mesh=mesh,
                                  node_axes=node_axes, window=window,
-                                 fused=fused, dist_key=key)
+                                 fused=fused, exchange=spec.exchange,
+                                 binfo=binfo, thresh=thresh,
+                                 n_shards=n_shards, dist_key=key)
         block = n // n_shards
         pol = policy or make_policy(spec.mode, spec.h)
         caps = bucket_capacities(block, ratio=spec.bucket_ratio)
 
         colors, base, wl = alg.init_state(ig)
         count = n
+        bnd = spec.exchange != "dense"
+        epi = getattr(dense_fn, "exchanges_per_iter", 1)
+        xtrace: list[str] = []
+        xbytes: list[int] = []
+        if bnd:
+            # per-shard color VIEWS (DESIGN.md §13): every view starts as
+            # the replicated init vector, then tracks owned + ghost slots
+            colors = jnp.broadcast_to(colors, (n_shards,) + colors.shape)
+            bcaps = list(binfo.capacities)
+            prev_mx = block   # changed-boundary high-water for prediction
 
         trace: list[str] = []
         counts: list[int] = []
@@ -679,14 +716,36 @@ class Session:
                     "session.iter", mode="D" if use_dense else "S",
                     count=count), Timer() as t:
                 if use_dense:
-                    colors, base, wl = dense_fn(colors, base, wl)
+                    if bnd:
+                        bcap = pick_bucket(
+                            bcaps, min(block, max(8, 2 * prev_mx)))
+                        colors, base, wl, xs = dense_fn(colors, base, wl,
+                                                        bcap=bcap)
+                    else:
+                        colors, base, wl = dense_fn(colors, base, wl)
                 else:
                     # any shard's live count is <= min(global count, block)
                     cap = pick_bucket(caps, min(count, block))
                     if wl.items.shape[0] > n_shards * cap:
                         wl = resize_fn(wl, cap)
-                    colors, base, wl = sparse_fn(colors, base, wl)
+                    if bnd:
+                        # changed boundary slots are also <= the worklist
+                        # capacity a sparse iteration runs at
+                        bcap = pick_bucket(
+                            bcaps, min(cap, block, max(8, 2 * prev_mx)))
+                        colors, base, wl, xs = sparse_fn(colors, base, wl,
+                                                         bcap=bcap)
+                    else:
+                        colors, base, wl = sparse_fn(colors, base, wl)
                 count = int(wl.count)  # the Pipe's single scalar read-back
+                if bnd:
+                    # one device->host transfer for both stats
+                    npk, prev_mx = (int(v) for v in np.asarray(xs))
+                    xtrace.append("b" if npk == epi
+                                  else ("d" if npk == 0 else "m"))
+                    xbytes.append(
+                        npk * packed_exchange_bytes(bcap, n_shards)
+                        + (epi - npk) * dense_swap_bytes(n))
             trace.append("D" if use_dense else "S")
             if meter is not None:
                 meter.add(t.seconds)
@@ -697,13 +756,20 @@ class Session:
             it += 1
 
         total = time.perf_counter() - t_start
-        full = np.asarray(colors[:n])
+        if bnd:
+            full = views_to_colors(np.asarray(colors), n_shards, n)
+        else:
+            full = np.asarray(colors[:n])
+            xtrace = ["d"] * it
+            xbytes = [epi * dense_exchange_bytes(n)] * it
         final = full[new_of_old[:g.n_nodes]]   # back to original labels
         final, n_colors = alg.finalize(final)
         return ColoringResult(colors=final, n_colors=n_colors, iterations=it,
                               mode_trace="".join(trace), counts=counts,
                               tti=tti, total_seconds=total,
-                              host_dispatches=it)
+                              host_dispatches=it,
+                              exchange_trace="".join(xtrace),
+                              exchange_bytes=xbytes)
 
 
 # ---------------------------------------------------------------------------

@@ -60,11 +60,21 @@ class ExecutionSpec:
     #: Pallas row-tile height; "auto" consults kernels/tune.py per
     #: (backend, layout kind, dtype), an int pins it, None = kernel default
     tile_rows: "int | str | None" = "auto"
+    #: dist regime only: cross-shard color publication path —
+    #: "dense" (full-vector psum), "boundary" (packed changed-boundary
+    #: buffers whenever they fit), "auto" (packed below the byte
+    #: break-even threshold; policy.exchange_threshold). Static: it keys
+    #: the compiled shard_map steps (DESIGN.md §13).
+    exchange: str = "dense"
 
     def __post_init__(self):
         if self.regime not in REGIMES:
             raise ValueError(
                 f"unknown regime {self.regime!r}; valid: {REGIMES}")
+        if self.exchange not in ("dense", "boundary", "auto"):
+            raise ValueError(
+                f"unknown exchange {self.exchange!r}; valid: "
+                "('dense', 'boundary', 'auto')")
 
     # -- resolution helpers --------------------------------------------------
 
@@ -116,7 +126,7 @@ class ExecutionSpec:
         return (self.regime, self.mode, self.resolved_algo(), self.layout,
                 self.h, self.window, self.impl, self.bucket_ratio,
                 self.max_iter, self.priority, self.fused, self.n_shards,
-                self.balance, self.tile_rows)
+                self.balance, self.tile_rows, self.exchange)
 
 
 def spec_for(
@@ -135,6 +145,7 @@ def spec_for(
     layout: "str | object | None" = None,
     balance: bool = True,
     tile_rows: "int | str | None" = "auto",
+    exchange: str = "dense",
 ) -> ExecutionSpec:
     """Map the legacy ``engine.color`` keyword surface onto a spec.
 
@@ -153,4 +164,5 @@ def spec_for(
         regime=regime, mode=mode, algo=algo, layout=layout, h=h,
         window=window, impl=impl, bucket_ratio=bucket_ratio,
         max_iter=max_iter, priority=priority, fused=fused,
-        n_shards=n_shards, balance=balance, tile_rows=tile_rows)
+        n_shards=n_shards, balance=balance, tile_rows=tile_rows,
+        exchange=exchange)

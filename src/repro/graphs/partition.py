@@ -4,8 +4,18 @@ Strategy: block partition of (optionally degree-shuffled) node ids across the
 flattened data axes of the mesh. Each shard owns a contiguous node block and
 the ELL/CSR rows for it; the only cross-shard value at runtime is the color
 vector (all-gathered once per iteration — see DESIGN.md §2).
+
+Boundary/ghost sets (DESIGN.md §13): for the sparse boundary-exchange path
+a shard only needs the colors of its *ghosts* — remote vertices adjacent
+to an owned vertex — and only needs to *publish* its own boundary
+vertices (owned vertices with a cross-shard edge). ``boundary_info``
+computes both sets at partition time from the CSR arrays, along with the
+fixed-capacity boundary-buffer ladder the shard_map steps need for
+static shapes.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -109,3 +119,119 @@ def shard_bounds(n_nodes: int, n_shards: int) -> np.ndarray:
     """Block boundaries (padded so every shard has an equal block)."""
     block = -(-n_nodes // n_shards)
     return np.arange(n_shards + 1) * block
+
+
+# ---------------------------------------------------------------------------
+# boundary / ghost sets for the sparse exchange path (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _round8(x: int) -> int:
+    return int(-(-max(x, 1) // 8) * 8)
+
+
+def exchange_break_even(n_nodes: int, n_shards: int) -> int:
+    """Per-shard packed capacity at which the packed exchange stops
+    beating the dense one: a packed publish moves two int32[(S, cap)]
+    buffers (ids + colors) per device — ``8 * cap * S`` bytes — while
+    the dense paths move ``~4 * n`` bytes; equality at
+    ``cap = (n+1) // (2S)``."""
+    return max(8, (n_nodes + 1) // (2 * max(n_shards, 1)))
+
+
+def boundary_capacities(block: int, max_boundary: int, n_nodes: int,
+                        n_shards: int, *, ratio: int = 2,
+                        floor: int = 8) -> tuple[int, ...]:
+    """Static capacity ladder for the per-shard boundary buffers.
+
+    Distinct from ``worklist.bucket_capacities`` on purpose: the
+    worklist ladder floors at 1024 (retrace economy for compute), but a
+    packed exchange only wins when its buffer is *small* relative to
+    ``n / S`` — so this ladder floors at 8 and tops out at the smallest
+    of the shard block, the largest per-shard boundary count (no shard
+    can ever publish more), and the byte break-even capacity
+    (``exchange_break_even`` — any larger rung would cost more bytes
+    than the dense fallback it replaces, so overflow SHOULD fall back).
+    Descending, 8-aligned, deduped; never empty.
+    """
+    top = min(max(block, 1), _round8(max_boundary),
+              _round8(exchange_break_even(n_nodes, n_shards)))
+    caps: list[int] = []
+    c = max(top, floor)
+    while c > floor:
+        caps.append(_round8(c))
+        c //= ratio
+    caps.append(floor)
+    out: list[int] = []
+    for x in caps:
+        if not out or x < out[-1]:
+            out.append(x)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryInfo:
+    """Partition-time boundary/ghost sets of an already-partitioned graph
+    (equal blocks: ``n_nodes % n_shards == 0``).
+
+    ``is_boundary[u]`` — u has a neighbour outside its own block, i.e.
+    some other shard reads u's color (u is a ghost of that shard).
+    ``counts[s]`` — boundary vertices owned by shard s; ``max_boundary``
+    bounds any shard's packed publish, and ``capacities`` is the static
+    buffer ladder built from it (``boundary_capacities``).
+    """
+
+    n_nodes: int
+    n_shards: int
+    block: int
+    is_boundary: np.ndarray          # bool[n]
+    counts: tuple                    # per-shard boundary counts
+    max_boundary: int
+    capacities: tuple                # descending static bcap ladder
+
+    def ghost_ids(self, s: int) -> np.ndarray:
+        """Remote vertices shard ``s`` reads — recomputed on demand (test
+        / inspection surface; the runtime steps never materialise it:
+        publishing every changed boundary vertex covers all ghosts)."""
+        raise NotImplementedError  # replaced below (needs the graph)
+
+
+def boundary_info(g: Graph, n_shards: int) -> BoundaryInfo:
+    """Compute the boundary sets of a ``prepare_partition``-ed graph.
+
+    Symmetric by construction for symmetric graphs: u is a ghost of
+    shard s iff s owns a neighbour of u iff u is a boundary vertex of
+    u's own shard (tests/test_boundary.py asserts the contract).
+    """
+    n = g.n_nodes
+    if n % n_shards != 0:
+        raise ValueError(
+            f"boundary_info needs equal blocks (n={n} % shards="
+            f"{n_shards} != 0); run prepare_partition first")
+    blk = n // n_shards
+    deg = np.asarray(g.arrays.degrees)
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    dst = np.asarray(g.arrays.col_idx).astype(np.int64)
+    cross = (src // blk) != (dst // blk)
+    isb = np.zeros(n, dtype=bool)
+    isb[src[cross]] = True
+    counts = tuple(int(isb[s * blk:(s + 1) * blk].sum())
+                   for s in range(n_shards))
+    max_b = max(counts) if counts else 0
+    caps = boundary_capacities(blk, max_b, n, n_shards)
+    return BoundaryInfo(n_nodes=n, n_shards=n_shards, block=blk,
+                        is_boundary=isb, counts=counts, max_boundary=max_b,
+                        capacities=caps)
+
+
+def ghost_ids(g: Graph, n_shards: int, s: int) -> np.ndarray:
+    """Remote vertices shard ``s`` reads: every neighbour (CSR ``dst``)
+    of an owned vertex that lives outside block ``s``. Sorted unique ids
+    — the contract-test surface for ghost-set symmetry/completeness."""
+    n = g.n_nodes
+    blk = n // n_shards
+    deg = np.asarray(g.arrays.degrees)
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    dst = np.asarray(g.arrays.col_idx).astype(np.int64)
+    mine = (src // blk) == s
+    remote = (dst // blk) != s
+    return np.unique(dst[mine & remote])

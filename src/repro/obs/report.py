@@ -56,23 +56,69 @@ def totals_from_trace(mode_trace: str, per_iter: dict) -> dict:
     return {k: nd * dense.get(k, 0) + ns * sparse.get(k, 0) for k in keys}
 
 
-def exchange_section(per_iter: dict, n_global: int,
-                     mode_trace: str) -> dict:
-    """The distributed regime's communication accounting.
+def dense_exchange_bytes(n_global: int) -> int:
+    """Per-device bytes of ONE ``color_psum``: the psum'd delta is an
+    ``int32[n_global + 1]`` (the +1 is the gather-sentinel slot) —
+    edge-count independent, the property Bogle & Slota's
+    bytes-per-iteration accounting makes auditable."""
+    return 4 * (n_global + 1)
 
-    One ``color_psum`` exchange moves an ``int32[n_global + 1]`` delta
-    per device (the +1 is the gather-sentinel slot), so every exchange
-    is ``4 x (n_global + 1)`` bytes of device traffic regardless of
-    edge count — the property Bogle & Slota's bytes-per-iteration
-    accounting makes auditable.
+
+def dense_swap_bytes(n_global: int) -> int:
+    """Per-device bytes of ONE ``dense_swap`` fallback: the tiled
+    all-gather of the disjoint owned ``int32`` blocks reassembles
+    exactly ``n_global`` slots (no sentinel — slot n stays local)."""
+    return 4 * n_global
+
+
+def packed_exchange_bytes(bcap: int, n_shards: int) -> int:
+    """Per-device bytes of ONE ``boundary_pack`` exchange at capacity
+    ``bcap``: two ``int32[bcap]`` all-gathers ((id, color) planes), each
+    landing ``bcap`` slots per shard on every device."""
+    return 8 * bcap * n_shards
+
+
+def exchange_section(per_iter: dict, n_global: int, mode_trace: str, *,
+                     exchange: str = "dense", n_shards: int = 1,
+                     exchange_trace: str = "",
+                     exchange_bytes=()) -> dict:
+    """The distributed regime's communication accounting, path-aware
+    (DESIGN.md §13).
+
+    ``per_iter`` maps ``"dense"``/``"sparse"`` -> the full trace-time
+    exchange-kind counts of one step (``color_psum`` on the dense
+    exchange path; ``boundary_pack`` AND ``dense_swap`` on the boundary
+    paths — both ``lax.cond`` branches trace, so both appear; which one
+    RAN each iteration is the runtime ``exchange_trace``/``bytes``
+    ledger the driver recorded).
     """
-    payload = 4 * (n_global + 1)
-    bytes_per_iter = {m: c * payload for m, c in per_iter.items()}
-    total = (mode_trace.count("D") * per_iter.get("dense", 0)
-             + mode_trace.count("S") * per_iter.get("sparse", 0))
-    return {"per_iter": per_iter, "payload_bytes": payload,
-            "bytes_per_iter": bytes_per_iter, "total": total,
-            "total_bytes": total * payload}
+    bytes_per_iter = [int(b) for b in exchange_bytes]
+    if exchange == "dense" and not bytes_per_iter:
+        payload = dense_exchange_bytes(n_global)
+        bytes_per_iter = [per_iter.get(
+            "dense" if m == "D" else "sparse", {}).get("color_psum", 0)
+            * payload for m in mode_trace]
+    # executed exchanges: each publish runs exactly ONE of its traced
+    # branches, so count publishes (color_psum on the dense path,
+    # boundary_pack == dense_swap == publish sites on the boundary paths)
+    def _epi(m):
+        d = per_iter.get("dense" if m == "D" else "sparse", {})
+        return d.get("color_psum", 0) or d.get("boundary_pack", 0)
+
+    total = sum(_epi(m) for m in mode_trace)
+    return {
+        "exchange": exchange,
+        "per_iter": per_iter,
+        "payload_bytes": {
+            "color_psum": dense_exchange_bytes(n_global),
+            "dense_swap": dense_swap_bytes(n_global),
+            "packed_per_slot": 8 * n_shards,   # x bcap = boundary_pack
+        },
+        "trace": exchange_trace,
+        "bytes_per_iter": bytes_per_iter,
+        "total_bytes": sum(bytes_per_iter),
+        "total": total,
+    }
 
 
 @dataclasses.dataclass

@@ -3,6 +3,7 @@ semantics, per-algorithm validity in every declared execution mode, IPGC
 bit-identity with the pre-subsystem engine, and per-algorithm contracts
 (JPL gather profile, spec-greedy fused pinning, shard-safety declaration).
 """
+import dataclasses
 from functools import partial
 
 import jax
@@ -45,10 +46,11 @@ def test_registry_unknown_name():
 
 
 def test_shard_safety_declarations():
+    # all three built-ins are shard-safe since the boundary-exchange PR
+    # made jpl's rounds owner-computable (DESIGN.md §13)
     assert get_algorithm("ipgc").shard_safe
     assert get_algorithm("spec-greedy").shard_safe
-    jpl = get_algorithm("jpl")
-    assert not jpl.shard_safe and jpl.shard_unsafe_reason
+    assert get_algorithm("jpl").shard_safe
 
 
 def test_abstract_algorithm_rejected():
@@ -212,9 +214,14 @@ def test_spec_greedy_dist_matches_quality(graphs):
 
 
 def test_dist_rejects_non_shard_safe():
+    # the declaration contract still fails fast — exercised via a stub
+    # algorithm now that every built-in ships distributed steps
+    stub = dataclasses.replace(
+        get_algorithm("ipgc"), name="ipgc-noshard", shard_safe=False,
+        shard_unsafe_reason="stub: declaration-contract test")
     g = make_graph("europe_osm_s", scale=0.01)
     with pytest.raises(ValueError, match="not shard-safe"):
-        color(g, algo="jpl", mode="dist-hybrid", n_shards=1)
+        color(g, algo=stub, mode="dist-hybrid", n_shards=1)
 
 
 def test_custom_algorithm_instance_accepted(graphs):

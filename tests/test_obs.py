@@ -257,23 +257,59 @@ def test_dist_report_exchange_accounting(g):
                          n_shards=1)
     rep = s.run(spec, g, trace=True)
     # fused dist steps (the driver default): ONE exchange per iteration
-    assert rep.exchanges["per_iter"] == {"dense": 1, "sparse": 1}
+    assert rep.exchanges["exchange"] == "dense"
+    assert rep.exchanges["per_iter"] == {"dense": {"color_psum": 1},
+                                         "sparse": {"color_psum": 1}}
     # ...matching the eval_shape invariant measured directly
     g2, _ = prepare_partition(g, 1)
     ig = ipgc.prepare(g2)
+    n = ig.n_nodes
     mesh = jax.make_mesh((1,), ("data",))
     step = make_dist_dense_step(ig, mesh, ("data",), window=32, fused=True)
     with distributed.EXCHANGE_COUNTS.scope() as ec:
-        jax.eval_shape(step, ipgc.init_colors(ig.n_nodes),
-                       jnp.zeros((ig.n_nodes,), jnp.int32),
-                       full_worklist(ig.n_nodes))
-        assert rep.exchanges["per_iter"]["dense"] == ec["color_psum"]
-    # bytes/iter: one int32[n+1] delta per device per exchange
-    assert rep.exchanges["payload_bytes"] == 4 * (ig.n_nodes + 1)
-    assert rep.exchanges["bytes_per_iter"]["dense"] == 4 * (ig.n_nodes + 1)
+        jax.eval_shape(step, ipgc.init_colors(n),
+                       jnp.zeros((n,), jnp.int32), full_worklist(n))
+        assert (rep.exchanges["per_iter"]["dense"]["color_psum"]
+                == ec["color_psum"])
+    # bytes/iter: one int32[n+1] delta per device per exchange; the
+    # dense path is 'd' every iteration at that flat payload
+    assert rep.exchanges["payload_bytes"]["color_psum"] == 4 * (n + 1)
+    assert rep.exchanges["trace"] == "d" * rep.iterations
+    assert rep.exchanges["bytes_per_iter"] == \
+        [4 * (n + 1)] * rep.iterations
     assert rep.exchanges["total"] == rep.iterations
+    assert rep.exchanges["total_bytes"] == rep.iterations * 4 * (n + 1)
+
+
+def test_dist_report_boundary_exchange_accounting(g):
+    """Boundary path: the report's runtime ledger prices each iteration
+    by the path it actually took — packed all-gathers when 'b', the
+    owned-block swap when 'd' (obs/report.py formulas)."""
+    from repro.obs.report import dense_swap_bytes, packed_exchange_bytes
+    s = Session()
+    spec = ExecutionSpec(regime="dist", mode="dist-hybrid", window=32,
+                         n_shards=1, exchange="auto")
+    rep = s.run(spec, g, trace=True)
+    n = rep.exchanges["payload_bytes"]["dense_swap"] // 4
+    assert rep.exchanges["exchange"] == "auto"
+    # both cond branches trace: the per-step profile counts both kinds
+    assert rep.exchanges["per_iter"]["dense"] == {"boundary_pack": 1,
+                                                  "dense_swap": 1}
+    assert rep.exchanges["per_iter"]["sparse"] == {"boundary_pack": 1,
+                                                   "dense_swap": 1}
+    trace = rep.exchanges["trace"]
+    assert len(trace) == rep.iterations and set(trace) <= {"d", "b"}
+    for mark, got in zip(trace, rep.exchanges["bytes_per_iter"]):
+        if mark == "d":
+            assert got == dense_swap_bytes(n)
+        else:   # packed: 8 bytes x bcap x n_shards, bcap ladder-valued
+            assert got % packed_exchange_bytes(1, 1) == 0 and got > 0
     assert rep.exchanges["total_bytes"] == \
-        rep.iterations * 4 * (ig.n_nodes + 1)
+        sum(rep.exchanges["bytes_per_iter"])
+    # same run, same colors as the dense-exchange report
+    rep0 = s.run(ExecutionSpec(regime="dist", mode="dist-hybrid",
+                               window=32, n_shards=1), g)
+    np.testing.assert_array_equal(rep.colors, rep0.colors)
 
 
 def test_outlined_report_and_engine_entry_point(g):
