@@ -56,6 +56,11 @@ resident lanes refilled at chunk boundaries — against one static
 ``BENCH_stream.json`` with graphs/sec both ways, the stream-vs-static
 ratio (acceptance: >= 2x) and per-request latency percentiles. Every
 streamed result is verified bit-identical to a solo ``Session.run``.
+Three adaptive sub-legs (DESIGN.md §14) ride along: an open-loop bursty
+arrival trace comparing adaptive lanes + ``serving()`` against the
+fixed-width synchronous front-end (acceptance: >= 1.3x throughput), a
+two-resident-rung width check (b=2, not the configured 8), and an
+EDF-vs-FIFO deadline replay (EDF must meet strictly more).
 
   PYTHONPATH=src python -m benchmarks.bench_engine_modes --stream
 
@@ -452,10 +457,53 @@ STREAM_MIX = ("europe_osm_s", "circuit5M_s", "europe_osm_s", "circuit5M_s",
               "rgg_n_2_24_s0_s")
 
 
+def _replay_open_loop(sess, spec, cfg, requests, arrivals, *,
+                      asynchronous):
+    """Replay an open-loop arrival trace against one stream config.
+
+    ``asynchronous=False`` is the PR-7-style front-end: one caller
+    thread interleaving due submissions with ``pump()`` calls.
+    ``asynchronous=True`` submits from the caller while the
+    ``serving()`` pump thread owns the device — host admission overlaps
+    device execution. Returns ``(tickets, makespan_seconds, stream)``;
+    the makespan runs from the first arrival to service idle.
+    """
+    import time as _time
+
+    stream = sess.stream(spec, cfg)
+    tickets = []
+    t0 = _time.perf_counter()
+    if asynchronous:
+        with stream.serving():
+            for g, due in zip(requests, arrivals):
+                lag = due - (_time.perf_counter() - t0)
+                if lag > 0:
+                    _time.sleep(lag)
+                tickets.append(stream.submit(g))
+        # serving() exit blocks until the pump thread drains the service
+    else:
+        i = 0
+        while i < len(requests) or not stream.idle:
+            now = _time.perf_counter() - t0
+            while i < len(requests) and arrivals[i] <= now:
+                tickets.append(stream.submit(requests[i]))
+                i += 1
+            if stream.idle and i < len(requests):
+                lag = arrivals[i] - (_time.perf_counter() - t0)
+                if lag > 0:
+                    _time.sleep(lag)
+            else:
+                stream.pump()
+    return tickets, _time.perf_counter() - t0, stream
+
+
 def bench_stream(count: int = 20, max_nodes: int = 4_000, lanes: int = 4,
-                 seed: int = 7, quiet: bool = False,
+                 seed: int = 7, ol_lanes: int = 8,
+                 ol_rate: float | None = None, ol_burstiness: float = 2.0,
+                 quiet: bool = False,
                  out_path: str | None = "BENCH_stream.json") -> dict:
-    """Continuous-batching leg (DESIGN.md §11) -> ``BENCH_stream.json``.
+    """Continuous-batching leg (DESIGN.md §11, §14) ->
+    ``BENCH_stream.json``.
 
     A heavy-tailed request mix (bounded Pareto over graph sizes — many
     small graphs, a few huge ones) is colored two ways on one warm
@@ -464,9 +512,9 @@ def bench_stream(count: int = 20, max_nodes: int = 4_000, lanes: int = 4,
       static   ``run_batch`` — every shape-class rung is one barrier
                batch padded to a power-of-two lane count, iterating until
                its slowest member drains
-      stream   ``Session.stream`` — a fixed set of resident lanes per
-               rung, drained lanes refilled from the queue at chunk
-               boundaries, so small requests stop paying for the tail
+      stream   ``Session.stream`` — resident lanes per rung, drained
+               lanes refilled from the queue at chunk boundaries, so
+               small requests stop paying for the tail
 
     The mix pins ``layout="ell-tail"`` (the stream contract is
     ELL-family only; the auto planner would hand some draws
@@ -475,13 +523,27 @@ def bench_stream(count: int = 20, max_nodes: int = 4_000, lanes: int = 4,
     bit-identical (colors, iterations, mode trace) to a solo
     ``Session.run`` of the same request. Latency percentiles come from
     the tickets' enqueue/admit/drain stamps.
+
+    Three adaptive sub-legs (DESIGN.md §14) ride on the same session:
+
+      open_loop     a multi-rung bursty arrival trace
+                    (``heavy_tail_requests(rate=...)``) replayed twice —
+                    fixed-width synchronous front-end (the PR-7
+                    behaviour) vs adaptive lanes under ``serving()``.
+                    Acceptance: adaptive/async throughput >= 1.3x fixed.
+      two_resident  two same-rung requests against ``lanes=8`` must run
+                    at b=2, not the configured width.
+      deadlines     one trace, two admission policies on a manual
+                    clock: EDF must meet strictly more deadlines than
+                    FIFO.
     """
     import jax
 
     from repro.core.policy import Timer
     from repro.exec import ExecutionSpec, Session
     from repro.graphs import get_dataset_batch
-    from repro.serve import StreamConfig
+    from repro.graphs.registry import heavy_tail_requests
+    from repro.serve import ManualClock, StreamConfig
 
     # min_nodes sits just above the capacity ladder's second rung
     # (max_nodes/2 under the default bucket_ratio=2), so the whole mix
@@ -531,6 +593,130 @@ def bench_stream(count: int = 20, max_nodes: int = 4_000, lanes: int = 4,
     def pct(p):
         return round(float(h_total.percentile(p)), 4)
 
+    # -- open loop: adaptive+async vs the PR-7 fixed-lane front-end ----
+    # a multi-rung mix (min_nodes well below the top rung) under timed
+    # arrivals: rungs are sparsely resident most of the time, which is
+    # exactly where a fixed width pays for lanes it doesn't use
+    if ol_rate is None:
+        ol_rate = max(10.0, 2.0 * count / t_stream.seconds)
+    ol_entries = heavy_tail_requests(
+        count, seed=seed, names=STREAM_MIX, min_nodes=max_nodes // 8,
+        max_nodes=max_nodes, alpha=1.5, rate=ol_rate,
+        burstiness=ol_burstiness)
+    arrivals = [e[2] for e in ol_entries]
+    ol_graphs = get_dataset_batch(ol_entries, seed=seed, layout="ell-tail")
+    ol_solo = [sess.run(spec, g) for g in ol_graphs]
+
+    def ol_cfg(adaptive, lanes_=None):
+        return StreamConfig(lanes=lanes_ or ol_lanes,
+                            adaptive_lanes=adaptive, chunk="auto",
+                            max_queue=count, max_nodes=max_nodes)
+
+    # compile passes: adaptive growth under real-time arrivals can
+    # dispatch at ANY pow2 width <= the cap (growth timing is load-
+    # dependent), so compile the whole width ladder for every rung in
+    # the mix — a fixed-width closed-loop run dispatches at exactly b
+    b = 1
+    while b <= ol_cfg(False).lanes_resolved:
+        sess.stream(spec, ol_cfg(False, lanes_=b)).run(ol_graphs)
+        b *= 2
+
+    def ol_leg(adaptive, asynchronous, runs=2):
+        best = None
+        for _ in range(runs):
+            tks, wall, s = _replay_open_loop(
+                sess, spec, ol_cfg(adaptive), ol_graphs, arrivals,
+                asynchronous=asynchronous)
+            for g, tk, ref in zip(ol_graphs, tks, ol_solo):
+                assert tk.status == "done", (tk.seq, tk.status, tk.reason)
+                np.testing.assert_array_equal(tk.result.colors, ref.colors)
+                assert tk.result.iterations == ref.iterations
+            if best is None or wall < best[0]:
+                best = (wall, s)
+        wall, s = best
+        st = s.stats()
+        h = s.metrics.get("stream.total_seconds")
+        return {
+            "makespan_s": round(wall, 4),
+            "gps": round(count / wall, 2),
+            "p50_s": round(float(h.percentile(50)), 4),
+            "p99_s": round(float(h.percentile(99)), 4),
+            "lane_occupancy": st["lane_occupancy"],
+            "shed_rate": round(st["rejected"] / max(1, st["submitted"]), 4),
+            "lane_groups": st["lane_groups"],
+        }
+
+    ol_fixed = ol_leg(adaptive=False, asynchronous=False)
+    ol_adaptive = ol_leg(adaptive=True, asynchronous=True)
+    ol_ratio = ol_fixed["makespan_s"] / ol_adaptive["makespan_s"]
+    p99_ratio = (ol_fixed["p99_s"] / ol_adaptive["p99_s"]
+                 if ol_adaptive["p99_s"] > 0 else None)
+    open_loop = {
+        "knobs": {"count": count, "min_nodes": max_nodes // 8,
+                  "max_nodes": max_nodes, "lanes": ol_lanes,
+                  "rate": round(ol_rate, 2), "burstiness": ol_burstiness},
+        "fixed_sync": ol_fixed,
+        "adaptive_async": ol_adaptive,
+        "adaptive_vs_fixed_gps": round(ol_ratio, 2),
+        "fixed_vs_adaptive_p99": (None if p99_ratio is None
+                                  else round(p99_ratio, 2)),
+        "acceptance_ge_1_3x": ol_ratio >= 1.3,
+    }
+
+    # -- two residents pay for b=2, not the configured 8-lane width ----
+    # chunk=1 so both stay resident past the first pump: the recorded
+    # group state is a mid-flight two-resident rung running a b=2
+    # program (same compiled program — chunk is a traced scalar)
+    tr_stream = sess.stream(spec, StreamConfig(
+        lanes=8, chunk=1, max_queue=4, max_nodes=max_nodes))
+    tr_a, tr_b = tr_stream.submit(requests[0]), tr_stream.submit(requests[1])
+    tr_stream.pump()
+    (tr_grp,) = tr_stream._groups.values()
+    two_resident = {"b": tr_grp.b, "b_max": tr_grp.b_max,
+                    "resident": tr_grp.resident,
+                    "acceptance_b2": tr_grp.b == 2}
+    assert tr_grp.b == 2, two_resident
+    tr_stream.drain()
+    for tk, ref in zip((tr_a, tr_b), (solo[0], solo[1])):
+        np.testing.assert_array_equal(tk.result.colors, ref.colors)
+
+    # -- deadlines: EDF meets strictly more than FIFO on one trace -----
+    # deadlines are SJF completion rounds + one max-service margin on a
+    # manual clock (1 tick per pump round): feasible under EDF order for
+    # every request, while FIFO's arrival order blows through the tight
+    # ones whenever a long request lands early
+    iters = [r.iterations for r in solo]
+    sjf = sorted(range(count), key=lambda i: (iters[i], i))
+    deadlines, acc = {}, 0
+    for i in sjf:
+        acc += iters[i]
+        deadlines[i] = float(acc + max(iters))
+    dl_met, dl_shed = {}, {}
+    for admission in ("fifo", "edf"):
+        clk = ManualClock(start=0.0, tick=0.0)
+        s = sess.stream(spec, StreamConfig(
+            lanes=1, chunk=1, admission=admission, clock=clk,
+            max_queue=count, max_nodes=max_nodes))
+        tks = [s.submit(g, deadline_s=deadlines[i])
+               for i, g in enumerate(requests)]
+        while not s.idle:
+            s.pump()
+            clk.advance(1.0)
+            assert s.round < 100 * sum(iters) + 1000, "deadline leg hung"
+        dl_met[admission] = sum(1 for tk in tks if tk.deadline_met)
+        dl_shed[admission] = s.stats()["shed_deadline"]
+        for i, tk in enumerate(tks):
+            if tk.status == "done":
+                np.testing.assert_array_equal(tk.result.colors,
+                                              solo[i].colors)
+    assert dl_met["edf"] > dl_met["fifo"], (dl_met, dl_shed)
+    deadline_leg = {
+        "count": count, "fifo_met": dl_met["fifo"],
+        "edf_met": dl_met["edf"], "fifo_shed": dl_shed["fifo"],
+        "edf_shed": dl_shed["edf"],
+        "acceptance_edf_gt_fifo": dl_met["edf"] > dl_met["fifo"],
+    }
+
     report = {
         "backend": jax.default_backend(),
         "knobs": {"count": count, "names": list(STREAM_MIX),
@@ -550,7 +736,12 @@ def bench_stream(count: int = 20, max_nodes: int = 4_000, lanes: int = 4,
         "chunk_dispatches": sum(tk.chunks for tk in tickets),
         "stream_stats": stream.stats(),
         "metrics": stream.metrics.as_dict(),
-        "verified_bit_identical": len(tickets),
+        "verified_bit_identical": len(tickets) + 2 * len(ol_graphs) + 2,
+        "open_loop": open_loop,
+        "two_resident": two_resident,
+        "deadlines": deadline_leg,
+        "adaptive_vs_fixed_gps": open_loop["adaptive_vs_fixed_gps"],
+        "fixed_vs_adaptive_p99": open_loop["fixed_vs_adaptive_p99"],
     }
     if not quiet:
         print(csv_row("stream", f"N={count}",
@@ -559,6 +750,18 @@ def bench_stream(count: int = 20, max_nodes: int = 4_000, lanes: int = 4,
                       f"{report['stream_vs_static']}x",
                       f"p50 {report['latency']['p50_s']}s",
                       f"p99 {report['latency']['p99_s']}s"))
+        print(csv_row(
+            "stream-ol", f"N={count}", f"rate {open_loop['knobs']['rate']}/s",
+            f"fixed {ol_fixed['gps']}/s occ {ol_fixed['lane_occupancy']}",
+            f"adaptive {ol_adaptive['gps']}/s occ "
+            f"{ol_adaptive['lane_occupancy']}",
+            f"{open_loop['adaptive_vs_fixed_gps']}x",
+            f"p99 {ol_fixed['p99_s']}s->{ol_adaptive['p99_s']}s"))
+        print(csv_row("stream-edf", f"N={count}",
+                      f"fifo met {dl_met['fifo']}/{count}",
+                      f"edf met {dl_met['edf']}/{count}",
+                      f"shed {dl_shed['edf']}",
+                      f"two-resident b={two_resident['b']}"))
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=1)

@@ -13,12 +13,18 @@ and THOSE are what this gate compares:
   BENCH_engine.json     geomean_outlined_vs_host               committed
   BENCH_kernels.json    fused_compact_geomean_speedup          committed
   BENCH_stream.json     stream_vs_static                       committed
+                        open_loop/adaptive_vs_fixed_gps        committed
+                        open_loop/fixed_vs_adaptive_p99        committed
   BENCH_serve.json      best_speedup_batch_ge_8                committed
   BENCH_obs.json        geomean_traced_vs_untraced (LOWER is   committed
                         better: telemetry overhead)
   BENCH_dist.json       boundary_vs_dense_bytes (bytes/iter    committed
                         saved by the sparse boundary exchange)
   ====================  =====================================  ==========
+
+A file may register several metrics — BENCH_stream.json gates on the
+closed-loop stream-vs-static ratio plus the open-loop adaptive-lane
+ratios (DESIGN.md §14).
 
 A fresh run regresses when its ratio falls below ``(1 - tolerance)`` of
 the committed value (or rises above, for lower-is-better metrics). The
@@ -43,14 +49,23 @@ import json
 import os
 import sys
 
-# metric registry: file -> (json key path, higher_is_better)
-METRICS: dict[str, tuple[tuple[str, ...], bool]] = {
-    "BENCH_engine.json": (("geomean_outlined_vs_host",), True),
-    "BENCH_kernels.json": (("fused_compact_geomean_speedup",), True),
-    "BENCH_stream.json": (("stream_vs_static",), True),
-    "BENCH_serve.json": (("best_speedup_batch_ge_8",), True),
-    "BENCH_obs.json": (("geomean_traced_vs_untraced",), False),
-    "BENCH_dist.json": (("boundary_vs_dense_bytes",), True),
+# metric registry: file -> list of (json key path, higher_is_better);
+# a file may gate on several independent ratios
+METRICS: dict[str, list[tuple[tuple[str, ...], bool]]] = {
+    "BENCH_engine.json": [(("geomean_outlined_vs_host",), True)],
+    "BENCH_kernels.json": [(("fused_compact_geomean_speedup",), True)],
+    "BENCH_stream.json": [
+        (("stream_vs_static",), True),
+        # adaptive lanes + async front-end vs fixed-width synchronous
+        # on the same open-loop arrival trace (DESIGN.md §14)
+        (("open_loop", "adaptive_vs_fixed_gps"), True),
+        # fixed p99 / adaptive p99 under open-loop arrivals: > 1 means
+        # the adaptive service also wins on tail latency
+        (("open_loop", "fixed_vs_adaptive_p99"), True),
+    ],
+    "BENCH_serve.json": [(("best_speedup_batch_ge_8",), True)],
+    "BENCH_obs.json": [(("geomean_traced_vs_untraced",), False)],
+    "BENCH_dist.json": [(("boundary_vs_dense_bytes",), True)],
 }
 
 DEFAULT_TOLERANCE = 0.15
@@ -83,33 +98,34 @@ def compare(baseline_dir: str, fresh_dir: str,
     """
     results = []
     regressions = skipped = 0
-    for fname, (path, higher_better) in METRICS.items():
-        entry = {"file": fname, "metric": "/".join(path)}
+    for fname, metrics in METRICS.items():
         base_doc = _load(os.path.join(baseline_dir, fname))
         fresh_doc = _load(os.path.join(fresh_dir, fname))
-        base = _dig(base_doc, path) if base_doc else None
-        fresh = _dig(fresh_doc, path) if fresh_doc else None
-        if not isinstance(base, (int, float)) or base <= 0:
-            entry["status"] = "skipped:no-baseline"
-            skipped += 1
-        elif not isinstance(fresh, (int, float)) or fresh <= 0:
-            entry["status"] = "skipped:no-fresh-run"
-            entry["baseline"] = base
-            skipped += 1
-        else:
-            ratio = fresh / base
-            entry.update(baseline=round(base, 4), fresh=round(fresh, 4),
-                         ratio=round(ratio, 4))
-            if higher_better:
-                bad = ratio < 1.0 - tolerance
-                good = ratio > 1.0 + tolerance
+        for path, higher_better in metrics:
+            entry = {"file": fname, "metric": "/".join(path)}
+            base = _dig(base_doc, path) if base_doc else None
+            fresh = _dig(fresh_doc, path) if fresh_doc else None
+            if not isinstance(base, (int, float)) or base <= 0:
+                entry["status"] = "skipped:no-baseline"
+                skipped += 1
+            elif not isinstance(fresh, (int, float)) or fresh <= 0:
+                entry["status"] = "skipped:no-fresh-run"
+                entry["baseline"] = base
+                skipped += 1
             else:
-                bad = ratio > 1.0 + tolerance
-                good = ratio < 1.0 - tolerance
-            entry["status"] = ("regressed" if bad
-                               else "improved" if good else "ok")
-            regressions += bad
-        results.append(entry)
+                ratio = fresh / base
+                entry.update(baseline=round(base, 4),
+                             fresh=round(fresh, 4), ratio=round(ratio, 4))
+                if higher_better:
+                    bad = ratio < 1.0 - tolerance
+                    good = ratio > 1.0 + tolerance
+                else:
+                    bad = ratio > 1.0 + tolerance
+                    good = ratio < 1.0 - tolerance
+                entry["status"] = ("regressed" if bad
+                                   else "improved" if good else "ok")
+                regressions += bad
+            results.append(entry)
     return {"tolerance": tolerance, "results": results,
             "regressions": regressions, "skipped": skipped}
 

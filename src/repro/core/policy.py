@@ -244,6 +244,121 @@ def make_chunk_policy(chunk) -> "FixedChunk | AdaptiveChunk":
         f"__call__ + observe_round, got {chunk!r}")
 
 
+# ---------------------------------------------------------------------------
+# admission policies — WHO gets the next free lane of the streaming service
+# ---------------------------------------------------------------------------
+#
+# The chunk policies above decide WHEN the scheduler may refill; an
+# admission policy decides WHO gets a freed lane (serve/stream.py,
+# DESIGN.md §14). It is the serving-side analogue of Chen et al.'s
+# priority functions (arXiv 1606.06025): choosing *what* to schedule
+# next matters as much as raw step speed. Policies are duck-typed over
+# the stream's Ticket objects (``seq`` / ``priority`` / ``deadline_at``
+# fields) so this module never imports the serving layer.
+#
+# Protocol (two methods, both pure w.r.t. scheduler state):
+#
+#   order(queued, clock)      -> the admission-scan order (a permutation
+#                                of ``queued``; the stream validates).
+#                                ``clock`` is the service's injectable
+#                                timestamp source — call it only if the
+#                                decision needs "now", so clock-counting
+#                                tests see zero extra reads under FIFO.
+#   hopeless(ticket, clock, estimate) -> a reason string to shed the
+#                                ticket *instead of admitting it*, or
+#                                None. ``estimate`` is the service-time
+#                                forecast for the ticket's lane group
+#                                (the p90 of the per-rung service-time
+#                                histogram in ``repro.obs``), or None
+#                                while that rung has no observations.
+#
+# Admission order never changes per-request results (bit-identity holds
+# for any order); it changes who waits — and, under deadlines, who is
+# worth admitting at all.
+
+
+@dataclasses.dataclass(frozen=True)
+class FIFOAdmission:
+    """Arrival order (the PR 7 behaviour): oldest ticket first."""
+
+    def order(self, queued, clock) -> list:
+        return list(queued)
+
+    def hopeless(self, ticket, clock, estimate) -> "str | None":
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class PriorityAdmission:
+    """Priority classes: higher ``Ticket.priority`` first, FIFO within a
+    class (``seq`` tiebreak keeps the sort stable and deterministic)."""
+
+    def order(self, queued, clock) -> list:
+        return sorted(queued, key=lambda t: (-t.priority, t.seq))
+
+    def hopeless(self, ticket, clock, estimate) -> "str | None":
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class EDFAdmission:
+    """Earliest-deadline-first with shed-on-hopeless.
+
+    Tickets with deadlines are admitted soonest-deadline-first;
+    deadline-less tickets follow in FIFO order. A ticket whose deadline
+    cannot be met even if admitted *right now* — ``now + estimate >
+    deadline - slack``, with ``estimate`` the observed per-rung service
+    time — is shed with a reason instead of occupying a lane that a
+    feasible request could use. With no observations yet (``estimate is
+    None``) nothing is shed: the policy never guesses.
+    """
+
+    #: safety margin subtracted from the deadline before the feasibility
+    #: comparison (seconds on the service clock)
+    slack: float = 0.0
+    #: False = order by deadline but never shed
+    shed_hopeless: bool = True
+
+    def order(self, queued, clock) -> list:
+        return sorted(
+            queued,
+            key=lambda t: (t.deadline_at if t.deadline_at is not None
+                           else float("inf"), t.seq))
+
+    def hopeless(self, ticket, clock, estimate) -> "str | None":
+        if (not self.shed_hopeless or ticket.deadline_at is None
+                or estimate is None):
+            return None
+        now = clock()
+        if now + estimate > ticket.deadline_at - self.slack:
+            return (f"deadline hopeless: now={now:.6g} + estimated "
+                    f"service {estimate:.6g}s exceeds deadline "
+                    f"{ticket.deadline_at:.6g}"
+                    + (f" - slack {self.slack:.6g}" if self.slack else ""))
+        return None
+
+
+def make_admission_policy(admission
+                          ) -> "FIFOAdmission | PriorityAdmission | object":
+    """Resolve a ``StreamConfig.admission`` knob: ``"fifo"`` /
+    ``"priority"`` / ``"edf"`` name a built-in, a policy object with
+    ``order`` + ``hopeless`` passes through."""
+    if isinstance(admission, str):
+        try:
+            return {"fifo": FIFOAdmission, "priority": PriorityAdmission,
+                    "edf": EDFAdmission}[admission]()
+        except KeyError:
+            raise ValueError(
+                f"unknown admission policy {admission!r}; valid: "
+                "'fifo', 'priority', 'edf' (or a policy object)") from None
+    if callable(getattr(admission, "order", None)) and \
+            callable(getattr(admission, "hopeless", None)):
+        return admission
+    raise TypeError(
+        "admission must be 'fifo', 'priority', 'edf' or a policy object "
+        f"with order + hopeless methods, got {admission!r}")
+
+
 def make_policy(mode: str, h: float = 0.6) -> Policy:
     # "dist-hybrid" etc. select the sharded engine at the dispatch layer;
     # the switching policy itself is the same — the distributed driver

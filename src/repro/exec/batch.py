@@ -134,6 +134,84 @@ def empty_lane(sc: ShapeClass) -> ipgc.IPGCGraph:
 
 
 # ---------------------------------------------------------------------------
+# lane-axis state bundle (adaptive lane groups, serve/stream.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LaneState:
+    """One streamed lane group's carried state, bundled with its
+    lane-stacked graph so the lane axis (axis 0 of every array leaf) can
+    be widened or compacted in one structural map.
+
+    Per-lane semantics are lane-count-independent: the vmapped step
+    treats lanes independently, so appending inert filler lanes
+    (``widen_lanes``) or dropping inert lanes (``take_lanes``) never
+    changes a resident lane's colors/aux/worklist/counters — the stream
+    bit-identity contract survives adaptive growth and shrink
+    (DESIGN.md §14). What DOES change with the lane count is the
+    compiled program (b is a shape), which is why growth is by powers of
+    two: the b-ladder is small and each width compiles once.
+    """
+
+    stacked: object      # lane-stacked IPGCGraph, (b, ...) leaves
+    colors: jax.Array    # (b, n_pad + 1)
+    aux: object          # algorithm aux state, lane-stacked
+    wl: object           # stacked Worklist: mask/items (b, n_pad), count (b,)
+    thresh: jax.Array    # (b,) per-lane policy thresholds
+    iters: jax.Array     # (b,) per-lane iteration counters
+    nd: jax.Array        # (b,) dense-iteration counters
+    ns: jax.Array        # (b,) sparse-iteration counters
+
+    @property
+    def b(self) -> int:
+        return int(self.thresh.shape[0])
+
+    def _fields(self) -> tuple:
+        return (self.stacked, self.colors, self.aux, self.wl,
+                self.thresh, self.iters, self.nd, self.ns)
+
+
+def fresh_lane_state(sc: ShapeClass, alg, b: int = 1) -> LaneState:
+    """``b`` inert lanes of shape class ``sc``: every lane is an
+    ``empty_lane`` with PAD-only colors, a drained worklist and zeroed
+    counters — the template a stream group populates on admission."""
+    lane = empty_lane(sc)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), lane)
+    aux = jax.tree.map(lambda *xs: jnp.stack(xs), alg.init_state(lane)[1])
+    z = jnp.zeros((1,), jnp.int32)
+    st = LaneState(stacked=stacked,
+                   colors=lane_colors(0, sc.n_pad)[None],
+                   aux=aux, wl=stacked_worklist([0], sc.n_pad),
+                   thresh=z, iters=z, nd=z, ns=z)
+    return widen_lanes(st, st, b) if b > 1 else st
+
+
+def widen_lanes(st: LaneState, filler: LaneState, b_new: int) -> LaneState:
+    """Grow the lane axis to ``b_new`` by appending broadcast copies of
+    ``filler``'s lane 0 (which must be inert); resident lanes' values
+    are bit-untouched."""
+    extra = b_new - st.b
+    if extra < 0:
+        raise ValueError(f"widen_lanes cannot shrink {st.b} -> {b_new}")
+    if extra == 0:
+        return st
+
+    def cat(x, f):
+        pad = jnp.broadcast_to(f[:1], (extra,) + x.shape[1:])
+        return jnp.concatenate([x, pad], axis=0)
+
+    return LaneState(*jax.tree.map(cat, st._fields(), filler._fields()))
+
+
+def take_lanes(st: LaneState, idx) -> LaneState:
+    """Compact (or reorder) the lane axis to ``idx`` — shrink-on-idle
+    retires inert lanes by selecting only the resident ones; each kept
+    lane's values are carried verbatim."""
+    idx = np.asarray(idx, np.int32)
+    return LaneState(*jax.tree.map(lambda x: x[idx], st._fields()))
+
+
+# ---------------------------------------------------------------------------
 # the batched device program
 # ---------------------------------------------------------------------------
 

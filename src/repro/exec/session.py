@@ -38,6 +38,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
+import threading
 import time
 
 import jax
@@ -157,6 +158,11 @@ class Session:
         self.stats = CacheStats()
         self._pin_depth = 0
         self._pinned: set = set()
+        #: reentrant guard for the cache/pin/evict triplet — a session
+        #: shared with an async stream front-end (serve/stream.py) sees
+        #: lookups from more than one thread; reentrancy keeps nested
+        #: ``cached`` calls inside a ``build`` legal
+        self._lock = threading.RLock()
 
     @contextlib.contextmanager
     def pin(self):
@@ -171,45 +177,50 @@ class Session:
         exit re-applies it against the then-oldest unpinned entries.
         Nests: inner pins extend the outermost scope.
         """
-        self._pin_depth += 1
+        with self._lock:
+            self._pin_depth += 1
         try:
             yield self
         finally:
-            self._pin_depth -= 1
-            if self._pin_depth == 0:
-                self._pinned.clear()
-                self._evict()
+            with self._lock:
+                self._pin_depth -= 1
+                if self._pin_depth == 0:
+                    self._pinned.clear()
+                    self._evict()
 
     def _evict(self) -> None:
         if self.max_entries is None:
             return
-        while len(self.cache) > self.max_entries:
-            # FIFO eviction: dicts preserve insertion order and the
-            # entry just added is last, so it never evicts itself;
-            # pinned keys (a live run's own entries) are skipped
-            victim = next((k for k in self.cache if k not in self._pinned),
-                          None)
-            if victim is None:
-                return
-            self.cache.pop(victim)
-            self.stats.evictions += 1
+        with self._lock:
+            while len(self.cache) > self.max_entries:
+                # FIFO eviction: dicts preserve insertion order and the
+                # entry just added is last, so it never evicts itself;
+                # pinned keys (a live run's own entries) are skipped
+                victim = next(
+                    (k for k in self.cache if k not in self._pinned),
+                    None)
+                if victim is None:
+                    return
+                self.cache.pop(victim)
+                self.stats.evictions += 1
 
     def cached(self, key: tuple, build):
         """Single lookup point — every compiled/prepared artifact in every
         regime goes through here, so ``stats`` reflects true reuse."""
-        try:
-            entry = self.cache[key]
-        except KeyError:
-            self.stats.misses += 1
-            entry = self.cache[key] = build()
+        with self._lock:
+            try:
+                entry = self.cache[key]
+            except KeyError:
+                self.stats.misses += 1
+                entry = self.cache[key] = build()
+                if self._pin_depth > 0:
+                    self._pinned.add(key)
+                self._evict()
+                return entry
             if self._pin_depth > 0:
                 self._pinned.add(key)
-            self._evict()
+            self.stats.hits += 1
             return entry
-        if self._pin_depth > 0:
-            self._pinned.add(key)
-        self.stats.hits += 1
-        return entry
 
     # -- public API ----------------------------------------------------------
 

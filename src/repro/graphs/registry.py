@@ -107,7 +107,9 @@ def heavy_tail_requests(
     min_nodes: int = 1_500,
     max_nodes: int = 50_000,
     alpha: float = 1.6,
-) -> "list[tuple[str, dict]]":
+    rate: "float | None" = None,
+    burstiness: float = 1.0,
+) -> "list[tuple]":
     """A power-law request mix — the serving workload's size distribution
     (DESIGN.md §11): many small graphs, a few huge ones, which is exactly
     the shape where a barrier batch stalls on its slowest lane and a
@@ -122,6 +124,16 @@ def heavy_tail_requests(
     request stream repeating popular inputs. Every ``names`` entry must
     be a node-count-parameterized suite family (its SUITE_SPECS kwargs
     carry ``n``), so target sizes map to exact generator scales.
+
+    ``rate`` turns the catalog into an OPEN-LOOP arrival trace
+    (DESIGN.md §14): each entry becomes ``(name, overrides, arrival_s)``
+    with arrival timestamps on the service's injectable clock scale
+    (seconds, first arrival at 0). Inter-arrival gaps are gamma with
+    mean ``1/rate``: ``burstiness=1`` is a Poisson process, > 1
+    clusters arrivals into bursts, < 1 smooths toward a paced trace.
+    The gap draws happen AFTER the size/family draws on the same
+    generator, so for one seed the request mix is byte-identical with
+    and without ``rate``.
     """
     import numpy as np
 
@@ -138,17 +150,34 @@ def heavy_tail_requests(
     if not 0 < min_nodes <= max_nodes:
         raise ValueError(f"need 0 < min_nodes <= max_nodes, got "
                          f"{min_nodes}..{max_nodes}")
+    if rate is not None and rate <= 0:
+        raise ValueError(f"rate must be positive (requests/second), "
+                         f"got {rate}")
+    if burstiness <= 0:
+        raise ValueError(f"burstiness must be positive, got {burstiness}")
     rng = np.random.default_rng(seed)
     u = rng.random(count)
     ratio = (min_nodes / max_nodes) ** alpha
     sizes = min_nodes / (1.0 - u * (1.0 - ratio)) ** (1.0 / alpha)
     picks = rng.integers(0, len(names), size=count)
+    arrivals = None
+    if rate is not None:
+        # gamma inter-arrivals with mean 1/rate: shape 1/b^2 keeps the
+        # squared coefficient of variation equal to burstiness^2
+        shape = 1.0 / (burstiness * burstiness)
+        gaps = rng.gamma(shape, burstiness * burstiness / rate,
+                         size=count)
+        gaps[0] = 0.0
+        arrivals = np.cumsum(gaps)
     out = []
-    for n_target, pick in zip(sizes, picks):
+    for i, (n_target, pick) in enumerate(zip(sizes, picks)):
         name = names[int(pick)]
         # quantize the scale so near-equal draws share one cache cell
         scale = round(float(n_target) / bases[name], 4)
-        out.append((name, {"scale": max(scale, 1e-4)}))
+        entry = (name, {"scale": max(scale, 1e-4)})
+        if arrivals is not None:
+            entry += (float(arrivals[i]),)
+        out.append(entry)
     return out
 
 
@@ -187,7 +216,9 @@ def get_dataset_batch(requests=None, *, heavy_tail=None,
         if isinstance(req, str):
             name, overrides = req, {}
         else:
-            name, overrides = req
+            # tolerate (name, overrides, arrival_s) open-loop entries:
+            # the timestamp is scheduling metadata, not a build knob
+            name, overrides = req[0], req[1]
         out.append(get_dataset(name, **{**common, **overrides}))
     return out
 

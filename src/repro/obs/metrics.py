@@ -85,6 +85,11 @@ def exp_edges(lo: float, hi: float, *, factor: float = 2.0
 LATENCY_EDGES = exp_edges(1e-6, 32.0)
 #: queue-depth / small-int ladder
 DEPTH_EDGES = (0, 1, 2, 4, 8, 16, 32, 64, 128, 256)
+#: signed seconds ladder for deadline slack (negative = deadline missed;
+#: values below the first edge land in bucket 0, so deep misses are
+#: counted, not dropped)
+SLACK_EDGES = (-8.0, -4.0, -2.0, -1.0, -0.5, -0.25, -0.1, -0.01, 0.0,
+               0.01, 0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
 
 
 class Histogram:

@@ -1,12 +1,19 @@
-"""Continuous-batching coloring service (DESIGN.md §11).
+"""Continuous-batching coloring service (DESIGN.md §11, §14).
 
 ``StreamSession`` turns ``Session.run_batch``'s barrier semantics —
 every lane launches together and waits for the slowest — into a
 continuous-batching loop: requests queue, drain at chunk boundaries,
 and freed lanes refill from the queue, with per-request results
-bit-identical to a solo ``Session.run``.
+bit-identical to a solo ``Session.run``. Lane groups grow and shrink
+with demand, admission order is pluggable (FIFO / priority / EDF with
+deadline shedding — core/policy.py), and ``StreamSession.serving()``
+overlaps host admission with device execution on a pump thread.
 """
+from repro.core.policy import (EDFAdmission, FIFOAdmission,
+                               PriorityAdmission, make_admission_policy)
 from repro.serve.clock import ManualClock
 from repro.serve.stream import StreamConfig, StreamSession, Ticket
 
-__all__ = ["ManualClock", "StreamConfig", "StreamSession", "Ticket"]
+__all__ = ["EDFAdmission", "FIFOAdmission", "ManualClock",
+           "PriorityAdmission", "StreamConfig", "StreamSession", "Ticket",
+           "make_admission_policy"]

@@ -121,3 +121,74 @@ def test_make_policy_modes_still_resolve():
     # guard: the tuning tests above rely on these spellings
     assert isinstance(make_policy("hybrid-auto"), AutoTuned)
     assert make_policy("dist-hybrid")(900, 1000) is True
+
+
+# ---------------------------------------------------------------------------
+# admission policies (serve-side priority functions, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def _tk(seq, priority=0, deadline_at=None):
+    from types import SimpleNamespace
+    return SimpleNamespace(seq=seq, priority=priority,
+                           deadline_at=deadline_at)
+
+
+def test_make_admission_policy_resolution():
+    from repro.core.policy import (EDFAdmission, FIFOAdmission,
+                                   PriorityAdmission,
+                                   make_admission_policy)
+    assert isinstance(make_admission_policy("fifo"), FIFOAdmission)
+    assert isinstance(make_admission_policy("priority"), PriorityAdmission)
+    assert isinstance(make_admission_policy("edf"), EDFAdmission)
+    pol = EDFAdmission(slack=0.5)
+    assert make_admission_policy(pol) is pol
+    with pytest.raises(ValueError, match="unknown admission"):
+        make_admission_policy("lifo")
+    with pytest.raises(TypeError, match="admission"):
+        make_admission_policy(42)
+
+
+def test_fifo_admission_never_reorders_and_never_calls_clock():
+    from repro.core.policy import FIFOAdmission
+
+    def forbidden():
+        raise AssertionError("FIFO must not read the clock")
+
+    pol = FIFOAdmission()
+    q = [_tk(3), _tk(1), _tk(2)]
+    assert pol.order(tuple(q), forbidden) == q
+    assert pol.hopeless(q[0], forbidden, 1.0) is None
+
+
+def test_priority_admission_sorts_by_class_then_seq():
+    from repro.core.policy import PriorityAdmission
+    pol = PriorityAdmission()
+    q = [_tk(0, priority=0), _tk(1, priority=5), _tk(2, priority=5)]
+    assert [t.seq for t in pol.order(tuple(q), lambda: 0.0)] == [1, 2, 0]
+    assert pol.hopeless(q[0], lambda: 0.0, 9.9) is None
+
+
+def test_edf_admission_orders_deadlines_first_then_fifo():
+    from repro.core.policy import EDFAdmission
+    pol = EDFAdmission()
+    q = [_tk(0), _tk(1, deadline_at=9.0), _tk(2, deadline_at=3.0), _tk(3)]
+    assert [t.seq for t in pol.order(tuple(q), lambda: 0.0)] == [2, 1, 0, 3]
+
+
+def test_edf_hopeless_rule():
+    from repro.core.policy import EDFAdmission
+    pol = EDFAdmission()
+    clock = lambda: 10.0
+    # no deadline / no estimate: never shed
+    assert pol.hopeless(_tk(0), clock, 5.0) is None
+    assert pol.hopeless(_tk(0, deadline_at=11.0), clock, None) is None
+    # feasible: now + estimate <= deadline
+    assert pol.hopeless(_tk(0, deadline_at=15.0), clock, 5.0) is None
+    # hopeless: reason names the numbers
+    reason = pol.hopeless(_tk(0, deadline_at=11.0), clock, 5.0)
+    assert reason is not None and "deadline" in reason
+    # slack tightens the rule; shed_hopeless=False disables it
+    assert EDFAdmission(slack=1.0).hopeless(
+        _tk(0, deadline_at=15.5), clock, 5.0) is not None
+    assert EDFAdmission(shed_hopeless=False).hopeless(
+        _tk(0, deadline_at=11.0), clock, 5.0) is None

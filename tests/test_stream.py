@@ -392,3 +392,259 @@ def test_heavy_tail_knob_validation():
         heavy_tail_requests(4, names=("Audikw_1_s",))
     with pytest.raises(ValueError, match="min_nodes"):
         heavy_tail_requests(4, min_nodes=0)
+
+# ---------------------------------------------------------------------------
+# adaptive lane width (DESIGN.md §14): demand growth, shrink-on-idle
+# ---------------------------------------------------------------------------
+
+def test_two_resident_rung_runs_at_b2_not_configured_width(pool):
+    # the acceptance property: a rung with two resident members pays for
+    # a b=2 program, not the configured 8-lane width
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(spec, StreamConfig(lanes=8, chunk=1))
+    # pool[0]/pool[1] share a node rung, so they contend for one group
+    a, b = stream.submit(pool[0]), stream.submit(pool[1])
+    stream.pump()
+    (grp,) = stream._groups.values()
+    assert (grp.b, grp.b_max, grp.resident) == (2, 8, 2)
+    stream.drain()
+    _assert_matches_solo(spec, [a, b])
+
+
+def test_adaptive_group_grows_and_shrinks_with_demand(pool):
+    spec = ExecutionSpec(regime="host", window=64)
+    # contention needs one rung: pick the most-populated rung and cycle
+    # its members (duplicate requests are the realistic case anyway)
+    caps = bucket_capacities(1 << 20)
+    by_rung: dict = {}
+    for g in pool:
+        by_rung.setdefault(pick_bucket(caps, g.n_nodes), []).append(g)
+    rung_pool = max(by_rung.values(), key=len)
+    host_iters = {id(g): _solo(spec, g).iterations for g in rung_pool}
+    slow = max(rung_pool, key=lambda g: host_iters[id(g)])
+    rest = [g for g in rung_pool if g is not slow] or [slow]
+    others = [rest[i % len(rest)] for i in range(4)]
+    stream = Session().stream(
+        spec, StreamConfig(lanes=8, chunk=1, shrink_after=1))
+    t_slow = stream.submit(slow)
+    stream.pump()                       # slow resident alone at b=1
+    t_others = [stream.submit(g) for g in others]
+    stream.pump()                       # queue pressure: grow mid-flight
+    (grp,) = stream._groups.values()
+    assert grp.grows >= 1 and grp.b >= 2
+    stream.drain()                      # tail rounds under-occupy: shrink
+    assert grp.shrinks >= 1
+    assert grp.max_b >= 2 and grp.b <= grp.max_b
+    # the resident request rode through every width change bit-identically
+    _assert_matches_solo(spec, [t_slow] + t_others)
+
+
+def test_fixed_mode_keeps_configured_width(pool):
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(
+        spec, StreamConfig(lanes=4, adaptive_lanes=False))
+    tk = stream.submit(pool[0])
+    stream.drain()
+    (grp,) = stream._groups.values()
+    assert (grp.b, grp.grows, grp.shrinks) == (4, 0, 0)
+    _assert_matches_solo(spec, [tk])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**30), st.integers(2, 8), st.integers(1, 3))
+def test_stream_invariants_across_grow_shrink(seed, lanes, chunk):
+    # the no-lost/no-duplicated/no-starved invariants must survive lane
+    # grow/shrink transitions: interleave submissions with pumps so
+    # residency rises and falls mid-flight
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(spec, StreamConfig(
+        lanes=lanes, chunk=chunk, shrink_after=1, max_queue=256))
+    rng = random.Random(seed)
+    reqs = [g for g in _pool() for _ in range(2)]
+    rng.shuffle(reqs)
+    tickets = []
+    for g in reqs:
+        tickets.append(stream.submit(g))
+        if rng.random() < 0.5:
+            stream.pump()
+    stream.drain()
+    assert len({tk.seq for tk in tickets}) == len(reqs)
+    assert all(tk.status == "done" for tk in tickets)
+    assert stream.idle
+    grown = sum(grp.grows for grp in stream._groups.values())
+    shrunk = sum(grp.shrinks for grp in stream._groups.values())
+    assert grown >= 1 and shrunk >= 1   # the transitions really happened
+    for tk in tickets:
+        assert 1 <= tk.admit_round <= tk.drain_round <= stream.round
+        assert 1 <= tk.chunks <= tk.result.iterations
+    _assert_matches_solo(spec, tickets)
+
+
+def test_stream_lanes_validated_and_surfaced():
+    for bad in (0, -1, True, 2.5, "8"):
+        with pytest.raises(ValueError, match="lanes"):
+            StreamConfig(lanes=bad)
+    with pytest.raises(ValueError, match="shrink_after"):
+        StreamConfig(shrink_after=0)
+    cfg = StreamConfig(lanes=3)
+    assert cfg.lanes_resolved == 4      # no longer silently hidden
+    stream = Session().stream(ExecutionSpec(regime="host", window=64), cfg)
+    assert stream.stats()["lanes_resolved"] == 4
+    assert stream.report().extra["stream"]["lanes_resolved"] == 4
+
+
+# ---------------------------------------------------------------------------
+# admission policies: priority classes, EDF + shed-on-hopeless
+# ---------------------------------------------------------------------------
+
+def test_stream_priority_admission_orders_by_class(pool):
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(
+        spec, StreamConfig(lanes=1, chunk=1, admission="priority"))
+    lo = stream.submit(pool[0], priority=0)
+    hi = stream.submit(pool[1], priority=5)   # same rung: shared lane
+    stream.pump()
+    assert hi.admit_round == 1          # jumped the FIFO order
+    assert lo.status == "queued"
+    stream.drain()
+    assert lo.admit_round > hi.admit_round
+    _assert_matches_solo(spec, [lo, hi])
+
+
+def test_stream_edf_orders_by_deadline(pool):
+    clk = ManualClock(start=0.0, tick=0.5)
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(spec, StreamConfig(
+        lanes=1, chunk=1, admission="edf", clock=clk))
+    # all three share a node rung so the single lane serializes them
+    loose = stream.submit(pool[0], deadline_s=1e6)
+    tight = stream.submit(pool[1], deadline_s=10.0)
+    free = stream.submit(pool[4])       # deadline-less: after EDF ones
+    stream.drain()
+    assert tight.admit_round < loose.admit_round < free.admit_round
+    _assert_matches_solo(spec, [loose, tight, free])
+
+
+def test_stream_edf_sheds_hopeless_tickets_with_reason(pool):
+    clk = ManualClock(start=0.0, tick=1.0)
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(spec, StreamConfig(
+        lanes=1, chunk=64, admission="edf", clock=clk))
+    g = pool[0]
+    warm = stream.submit(g, deadline_s=1e9)
+    stream.drain()                      # observes the rung's service time
+    assert warm.status == "done" and warm.deadline_met is True
+    hopeless = stream.submit(g, deadline_s=0.0)
+    stream.pump()
+    assert hopeless.status == "rejected"
+    assert "deadline" in hopeless.reason
+    assert stream.counters["shed_deadline"] == 1
+    assert stream.metrics.get("stream.outcome")["shed_deadline"] == 1
+    feasible = stream.submit(g, deadline_s=1e9)
+    stream.drain()
+    assert feasible.status == "done" and feasible.deadline_met is True
+    # slack histogram saw both drained deadline tickets, never the shed
+    assert stream.metrics.get("stream.deadline_slack").count == 2
+
+
+def test_stream_edf_never_sheds_without_observations(pool):
+    # no service-time history => no estimate => the policy never guesses
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(
+        spec, StreamConfig(lanes=1, admission="edf"))
+    tk = stream.submit(pool[0], deadline_s=0.0)   # unmeetable, but unknown
+    stream.drain()
+    assert tk.status == "done" and tk.deadline_met is False
+
+
+def test_admission_policy_order_must_be_permutation(pool):
+    class Bad:
+        def order(self, queued, clock):
+            return list(queued)[:-1]
+
+        def hopeless(self, ticket, clock, estimate):
+            return None
+
+    stream = Session().stream(ExecutionSpec(regime="host", window=64),
+                              StreamConfig(admission=Bad()))
+    stream.submit(pool[0])
+    stream.submit(pool[1])
+    with pytest.raises(ValueError, match="permutation"):
+        stream.pump()
+
+
+# ---------------------------------------------------------------------------
+# shed-callable robustness: a raising callback rejects, never loses
+# ---------------------------------------------------------------------------
+
+def test_stream_shed_callable_raising_rejects_with_reason(pool):
+    def boom(queued, incoming):
+        raise RuntimeError("kaboom")
+
+    stream = Session().stream(
+        ExecutionSpec(regime="host", window=64),
+        StreamConfig(lanes=1, max_queue=1, shed=boom))
+    a = stream.submit(pool[0])
+    b = stream.submit(pool[1])          # overload: the callback raises
+    assert b.status == "rejected"
+    assert "shed policy raised" in b.reason and "kaboom" in b.reason
+    assert a.status == "queued"         # queued work survives the fault
+    stream.drain()
+    assert a.status == "done"
+    _assert_matches_solo(ExecutionSpec(regime="host", window=64), [a])
+
+
+# ---------------------------------------------------------------------------
+# async front-end: producer threads overlap the pump loop
+# ---------------------------------------------------------------------------
+
+def test_stream_serving_overlaps_producers_with_pump_thread(pool):
+    import threading
+
+    spec = ExecutionSpec(regime="host", window=64)
+    stream = Session().stream(spec, StreamConfig(lanes=4, max_queue=256))
+    tickets: list = []
+
+    def produce():
+        for g in pool:
+            tickets.append(stream.submit(g))
+
+    with stream.serving():
+        threads = [threading.Thread(target=produce) for _ in range(2)]
+        for th in threads:
+            th.start()
+        extra = stream.submit(pool[0])  # the caller is a producer too
+        for th in threads:
+            th.join()
+        assert extra.wait(timeout=300)  # per-ticket completion waiting
+    assert stream.idle
+    assert len({tk.seq for tk in tickets}) == 2 * len(pool)
+    _assert_matches_solo(spec, tickets + [extra])
+    with pytest.raises(RuntimeError, match="serving"):
+        with stream.serving():
+            stream.run(pool[:1])        # sync driver is refused mid-serve
+
+
+# ---------------------------------------------------------------------------
+# open-loop arrival traces (graphs/registry)
+# ---------------------------------------------------------------------------
+
+def test_heavy_tail_open_loop_arrivals_deterministic_and_monotone():
+    plain = heavy_tail_requests(16, seed=7)
+    timed = heavy_tail_requests(16, seed=7, rate=10.0)
+    # the request mix is byte-identical with and without timestamps
+    assert [t[:2] for t in timed] == plain
+    assert timed == heavy_tail_requests(16, seed=7, rate=10.0)
+    arrivals = [t[2] for t in timed]
+    assert arrivals[0] == 0.0
+    assert all(b >= a for a, b in zip(arrivals, arrivals[1:]))
+    bursty = heavy_tail_requests(16, seed=7, rate=10.0, burstiness=4.0)
+    assert [t[:2] for t in bursty] == plain
+    assert bursty != timed
+    # the batch builder treats the timestamp as scheduling metadata
+    gs = get_dataset_batch(heavy_tail={"count": 6, "rate": 5.0}, seed=7)
+    assert len(gs) == 6
+    with pytest.raises(ValueError, match="rate"):
+        heavy_tail_requests(4, rate=0.0)
+    with pytest.raises(ValueError, match="burstiness"):
+        heavy_tail_requests(4, rate=1.0, burstiness=0.0)
